@@ -1,0 +1,64 @@
+"""Fig 1 / Fig 14 / Table IV analogue: estimate-vs-measured discrepancy.
+
+- model mode: static ("C-synth") vs oracle ("Co-sim") vs device counters
+  (exact) — dynamic control flow makes the static column wrong.
+- wallclock mode: REAL host-time measurements diverge from all model
+  estimates (runtime dynamics — the Fig 1 board-vs-sim gap).
+- Table IV: the discrepancy under different configurations (sizes,
+  buffer depths) — bottleneck RANKINGS shift between stages (Fig 14).
+"""
+import jax
+import numpy as np
+
+from benchmarks.common import emit, layered_workload
+from repro.core import ProbeConfig, probe
+from repro.core.report import bump_chart
+
+
+def run():
+    for tag, (L, W) in {"small": (4, 32), "large": (10, 64)}.items():
+        fn, args = layered_workload(L, W)
+        pf = probe(fn, ProbeConfig(inline="off_all"))
+        out, rec = pf(*args)
+        rep = pf.report(rec)
+        rows = {r.path: r for r in rep.rows}
+        top = [r for r in rep.rows if "/" not in r.path]
+        for r in top:
+            static = "?" if r.dynamic else str(r.static_cycles)
+            dev = ("n/a" if r.dynamic else
+                   f"{100 * (r.static_cycles - r.total_cycles) / max(r.total_cycles, 1):+.1f}%")
+            emit(f"discrepancy/{tag}/{r.path}", 0.0,
+                 f"static={static};measured={r.total_cycles};dev={dev}")
+
+        # wallclock mode on the same program
+        pfw = probe(fn, ProbeConfig(inline="off_all",
+                                    cycle_source="wallclock"))
+        _, recw = pfw(*args)
+        repw = pfw.report(recw)
+
+        # Fig 14 bump chart: bottleneck ranking per stage
+        def ranking(rep):
+            rs = [r for r in rep.rows if r.path.count("/") >= 1]
+            rs.sort(key=lambda r: -r.total_cycles)
+            return [r.path for r in rs[:3]]
+
+        def static_ranking(rep):
+            rs = [r for r in rep.rows
+                  if r.path.count("/") >= 1 and not r.dynamic]
+            rs.sort(key=lambda r: -(r.static_cycles or 0))
+            return [r.path for r in rs[:3]]
+
+        chart = bump_chart({
+            "C-synth(static)": static_ranking(rep),
+            "model(oracle)": ranking(rep),
+            "wallclock(board)": ranking(repw),
+        }, width=28)
+        print(chart)
+        same = ranking(rep)[0] == ranking(repw)[0]
+        emit(f"discrepancy/{tag}/bottleneck_shift", 0.0,
+             f"model_top={ranking(rep)[0]};wall_top={ranking(repw)[0]};"
+             f"{'same' if same else 'SHIFTED'}")
+
+
+if __name__ == "__main__":
+    run()

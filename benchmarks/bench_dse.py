@@ -1,0 +1,24 @@
+"""Fig 13 analogue: automated DSE over storage class x dump ratio ->
+Pareto frontier of (resource, DRAM bandwidth, latency)."""
+from benchmarks.common import emit, layered_workload
+from repro.core import ProbeConfig, run_dse
+
+
+def run():
+    fn, args = layered_workload(8, 48)
+    res = run_dse(fn, args, ProbeConfig(inline="off_all"),
+                  storages=("registers", "hybrid", "bram"),
+                  offload_ratios=(0.0, 0.25, 0.5, 0.75), repeats=2)
+    for p in res.points:
+        tag = "PARETO" if p in res.pareto else ""
+        emit(f"dse/{p.storage}_d{p.depth}_dump{int(p.offload_ratio * 100)}",
+             p.latency_overhead * 1e6,
+             f"state_B={p.state_bytes};dram_B={p.dram_bytes};"
+             f"bw_Bps={p.dram_bandwidth_bps:.0f};{tag}")
+    best = res.best()
+    emit("dse/BEST", 0.0,
+         f"{best.storage}_dump{int(best.offload_ratio * 100)}pct")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Fig 7/11 analogue: cold setup (trace+extract+instrument+compile) vs
+incremental retarget (trace/hierarchy reused), and the untouched base
+executable (decoupling)."""
+from benchmarks.common import emit, layered_workload
+from repro.core import ProbeConfig, measure_incremental
+
+
+def run():
+    fn, args = layered_workload(8, 48)
+    t = measure_incremental(
+        fn, args,
+        ProbeConfig(targets=("layers",), inline="off_all"),
+        ProbeConfig(targets=("layers/scan#0/layer/mlp",), inline="off_all"))
+    emit("incremental/cold_setup", t.cold_total_s * 1e6, "")
+    emit("incremental/retarget", t.retarget_total_s * 1e6,
+         f"pct_of_cold={100 * t.retarget_total_s / t.cold_total_s:.1f}%")
+    emit("incremental/base_executable", 0.0,
+         "reused" if t.base_compile_reused else "RECOMPILED")
+    emit("incremental/artifact_reuse", 0.0,
+         f"{t.reuse_fraction * 100:.1f}%")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Table III analogue (Fmax impact): step latency of the instrumented
+program vs the original, per storage configuration. The paper's claim:
+decoupled probing leaves kernel timing essentially unchanged."""
+import jax
+
+from benchmarks.common import emit, layered_workload, timeit
+from repro.core import ProbeConfig, probe
+
+
+def run():
+    fn, args = layered_workload(10, 256)
+    base = jax.jit(fn)
+    t_base = timeit(base, *args)
+    emit("latency/original", t_base, "")
+    for name, cfg in [
+        ("registers", ProbeConfig(buffer_depth=4)),
+        ("bram", ProbeConfig(buffer_depth=64)),
+        ("registers_deep_probe", ProbeConfig(buffer_depth=4,
+                                             inline="off_all")),
+    ]:
+        pf = probe(fn, cfg)
+        pf(*args)
+        t = timeit(lambda *a: pf(*a)[0], *args)
+        emit(f"latency/{name}", t,
+             f"overhead={100 * (t - t_base) / t_base:+.1f}%;"
+             f"probes={len(pf.probe_paths())}")
+
+
+if __name__ == "__main__":
+    run()

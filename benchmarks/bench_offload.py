@@ -1,0 +1,24 @@
+"""Fig 12 analogue: runtime vs DRAM dump ratio (0/25/50/100% of probes
+spilling their rings to the host sink)."""
+import jax
+
+from benchmarks.common import emit, layered_workload, timeit
+from repro.core import ProbeConfig, probe
+
+
+def run():
+    fn, args = layered_workload(10, 48)
+    base = timeit(jax.jit(fn), *args)
+    for ratio in (0.0, 0.25, 0.5, 1.0):
+        pf = probe(fn, ProbeConfig(inline="off_all", buffer_depth=2,
+                                   offload=ratio))
+        pf.sink.reset()
+        pf(*args)
+        t = timeit(lambda *a: pf(*a)[0], *args, repeats=2)
+        emit(f"offload/dump_{int(ratio * 100)}pct", t,
+             f"dram_bytes={pf.sink.bytes_received};"
+             f"overhead_vs_plain={100 * (t - base) / base:+.1f}%")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Framework roofline bench: summarize the dry-run table (per §Roofline)
+as CSV rows; full table via `python -m repro.launch.roofline`."""
+from benchmarks.common import emit
+from repro.launch import roofline
+
+
+def run():
+    try:
+        cells = roofline.load_cells("16x16")
+    except Exception:
+        cells = []
+    if not cells:
+        emit("roofline/NOT_RUN", 0.0, "run python -m repro.launch.dryrun")
+        return
+    for rec in cells:
+        name = f"roofline/{rec['arch']}__{rec['shape']}"
+        if rec.get("skipped"):
+            emit(name, 0.0, "SKIP")
+            continue
+        if rec.get("error"):
+            emit(name, 0.0, "ERROR")
+            continue
+        t = roofline.cell_terms(rec, 256)
+        emit(name, t["bound_step_s"] * 1e6,
+             f"dominant={t['dominant']};useful={t['useful_ratio']:.3f};"
+             f"mem_GiB={rec['memory']['peak_estimate_bytes'] / 2**30:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,74 @@
+"""Shared benchmark workloads + CSV emission."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import smoke_config
+from repro.models import Model
+
+
+def emit(name, us_per_call, derived=""):
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timeit(fn, *args, repeats=3):
+    fn(*args)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def layered_workload(n_layers=6, width=48):
+    """The 28-test-case stand-in family: layered matmul programs with
+    nested scopes, a loop, and a data-dependent while."""
+    def fn(x, w):
+        def body(c, _):
+            with jax.named_scope("layer"):
+                with jax.named_scope("attn"):
+                    c = jnp.tanh(c @ w) @ w.T + c
+                with jax.named_scope("mlp"):
+                    c = jax.nn.silu(c @ w) @ w.T + c
+            return c, None
+        with jax.named_scope("layers"):
+            x, _ = jax.lax.scan(body, x, None, length=n_layers)
+        def cond(s):
+            return jnp.sum(jnp.abs(s[0])) < 1e4
+        def wbody(s):
+            with jax.named_scope("grow"):
+                return (s[0] * 1.3 + 0.1, s[1] + 1)
+        with jax.named_scope("dynamic"):
+            x, n = jax.lax.while_loop(cond, wbody, (x, jnp.int32(0)))
+        with jax.named_scope("head"):
+            return jnp.sum(x * x), n
+    x = jnp.ones((max(8, width // 4), width)) * 0.02
+    w = jnp.full((width, width), 1.0 / width)
+    return fn, (x, w)
+
+
+def model_workloads():
+    """Real-model probe subjects across families."""
+    out = {}
+    for arch in ("tinyllama-1.1b", "granite-moe-1b-a400m", "mamba2-370m",
+                 "zamba2-2.7b"):
+        cfg = smoke_config(arch)
+        m = Model(cfg)
+        params = m.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.zeros((2, 64), jnp.int32),
+                 "labels": jnp.ones((2, 64), jnp.int32)}
+        if cfg.frontend != "none":
+            continue
+
+        def mk(m):
+            def step(params, batch):
+                (loss, _), g = jax.value_and_grad(m.loss_fn, has_aux=True)(
+                    params, batch)
+                return loss
+            return step
+
+        out[arch] = (mk(m), (params, batch))
+    return out

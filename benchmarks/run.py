@@ -1,0 +1,37 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (+ a few rendered charts)."""
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_accuracy, bench_discrepancy, bench_dse,
+                            bench_incremental, bench_latency_impact,
+                            bench_offload, bench_overhead, bench_roofline)
+    benches = [
+        ("Table II  (cycle accuracy, 28 designs)", bench_accuracy),
+        ("Fig 8/9/10 (overhead + analytical model)", bench_overhead),
+        ("Fig 7/11  (incremental synthesis)", bench_incremental),
+        ("Table III (latency/Fmax impact)", bench_latency_impact),
+        ("Fig 12    (DRAM dump ratio)", bench_offload),
+        ("Fig 13    (DSE Pareto)", bench_dse),
+        ("Fig 1/14 + Table IV (discrepancies)", bench_discrepancy),
+        ("Roofline  (dry-run derived)", bench_roofline),
+    ]
+    failed = []
+    for title, mod in benches:
+        print(f"# === {title} ===", flush=True)
+        try:
+            mod.run()
+        except Exception as e:
+            failed.append(title)
+            traceback.print_exc()
+            print(f"{title},0.0,FAILED:{type(e).__name__}")
+    if failed:
+        print(f"# {len(failed)} bench(es) failed: {failed}")
+        sys.exit(1)
+    print("# all benches complete")
+
+
+if __name__ == '__main__':
+    main()

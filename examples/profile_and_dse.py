@@ -1,0 +1,50 @@
+"""Profile a REAL training step with RealProbe, find the bottleneck, and
+run the automated DSE over profiling configurations (paper Fig 13).
+
+    PYTHONPATH=src python examples/profile_and_dse.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import smoke_config
+from repro.core import ProbeConfig, probe, run_dse
+from repro.distributed.steps import build_train_step
+from repro.models import Model
+from repro.optim import adamw
+
+
+def main():
+    cfg = smoke_config("tinyllama-1.1b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.init(params, cfg.moment_dtype)
+    batch = {"tokens": jnp.zeros((4, 64), jnp.int32),
+             "labels": jnp.ones((4, 64), jnp.int32)}
+    step = build_train_step(model, TrainConfig(total_steps=100,
+                                               warmup_steps=10))
+
+    # ---- profile the production train step --------------------------
+    pf = probe(step, ProbeConfig(max_probes=30))
+    (params2, opt2, metrics), record = pf(params, opt, batch)
+    report = pf.report(record)
+    print(report.table())
+    bn = report.bottleneck()
+    print(f"\nbottleneck: {bn.path}  ({bn.total_cycles} cycles, "
+          f"{100 * bn.total_cycles / report.span:.1f}% of the step)\n")
+
+    # ---- automated DSE over probing configurations -------------------
+    res = run_dse(step, (params, opt, batch),
+                  ProbeConfig(max_probes=20),
+                  storages=("registers", "bram"),
+                  offload_ratios=(0.0, 0.5), repeats=1)
+    print(res.table())
+    best = res.best()
+    print(f"\nbest config: storage={best.storage} "
+          f"dump={int(best.offload_ratio * 100)}% "
+          f"(state {best.state_bytes} B, latency +"
+          f"{best.latency_overhead * 100:.1f}%)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Quickstart: the single-directive profiler on an arbitrary JAX program.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import ProbeConfig, probe
+
+
+# Any JAX program — NO changes needed for profiling (non-intrusive).
+def my_model(x, w):
+    def layer(c, _):
+        with jax.named_scope("layer"):
+            with jax.named_scope("attn"):
+                c = jnp.tanh(c @ w) @ w.T + c
+            with jax.named_scope("mlp"):
+                c = jax.nn.silu(c @ w) @ w.T + c
+        return c, None
+
+    with jax.named_scope("layers"):
+        x, _ = jax.lax.scan(layer, x, None, length=8)
+
+    # data-dependent loop: static estimates CANNOT know its trip count —
+    # only in-device measurement can (the paper's core point)
+    def cond(s):
+        return jnp.sum(jnp.abs(s[0])) < 5e3
+
+    def grow(s):
+        with jax.named_scope("grow"):
+            return (s[0] * 1.5 + 0.5, s[1] + 1)
+
+    with jax.named_scope("dynamic"):
+        x, n_iters = jax.lax.while_loop(cond, grow, (x, jnp.int32(0)))
+    return jnp.sum(x * x), n_iters
+
+
+def main():
+    x = jnp.ones((16, 64)) * 0.02
+    w = jnp.full((64, 64), 1.0 / 64)
+
+    # 1. the "pragma": one call
+    pf = probe(my_model, ProbeConfig(inline="off_all"))
+
+    # 2. run (jitted, instrumented, non-intrusive)
+    (out, n_iters), record = pf(x, w)
+    print(f"output={float(out):.2f}, while-loop ran {int(n_iters)} times\n")
+
+    # 3. results: per-module cycles, timeline, C-synth-style estimates
+    report = pf.report(record)
+    print(report.table())
+    print()
+    print(report.timeline(72))
+
+    # 4. cross-verify against the independent oracle (the "ILA")
+    oracle = pf.oracle(x, w)
+    i = pf.probe_paths().index("layers/scan#0/layer")
+    from repro.core.counters import c64_to_int
+    import numpy as np
+    device_cycles = int(c64_to_int(np.asarray(record["totals"][i])))
+    print(f"\nlayers/scan#0/layer: device={device_cycles} "
+          f"oracle={oracle.totals[i]} -> "
+          f"{'100% MATCH' if device_cycles == oracle.totals[i] else 'BUG'}")
+
+    # 5. retarget incrementally (no retrace of the model)
+    pf.retarget(ProbeConfig(targets=("dynamic",), inline="off_all"))
+    _, record2 = pf(x, w)
+    print("\nretargeted to the dynamic subtree:")
+    print(pf.report(record2).table())
+
+
+if __name__ == "__main__":
+    main()

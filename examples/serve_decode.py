@@ -1,0 +1,26 @@
+"""Batched serving: prefill a prompt batch, decode greedily in lock step
+(the decode_32k / long_500k dry-run shapes lower exactly this step).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch mamba2-370m
+"""
+import argparse
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b",
+                    help="any of the 10 assigned archs (smoke-sized)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+    toks = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
+                 max_new=args.max_new)
+    for i, row in enumerate(toks):
+        print(f"seq {i}: {row.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

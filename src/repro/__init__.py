@@ -1,0 +1,16 @@
+"""repro — RealProbe (Kim & Hao, 2025) adapted to TPU/JAX.
+
+A production-style JAX LM training/serving framework whose first-class
+feature is a non-intrusive, hierarchical, on-device performance profiler:
+
+- ``repro.core``        the paper's contribution (probe pragma, hierarchy
+                        extraction, cycle counters, buffer/offload, oracle,
+                        overhead model, DSE, incremental re-instrumentation)
+- ``repro.models``      LM substrate (dense/GQA/MoE/SSM/hybrid + stubs)
+- ``repro.kernels``     Pallas TPU kernels (flash attention, SSD scan)
+- ``repro.distributed`` DP/FSDP/TP/EP/SP sharding, pipeline, compression
+- ``repro.configs``     the 10 assigned architectures × 4 input shapes
+- ``repro.launch``      production mesh, multi-pod dry-run, train/serve
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,31 @@
+"""repro.core — RealProbe (Kim & Hao, 2025) adapted to TPU/JAX.
+
+The paper's contribution as a composable module:
+
+    from repro.core import probe, ProbeConfig
+    pf = probe(train_step, ProbeConfig(targets=("loss/layers",)))
+    out, record = pf(params, batch)        # non-intrusive, jitted
+    print(pf.report(record).timeline())
+
+Stages (paper Fig 3):
+  1 pragma     pragma.probe / ProbeConfig
+  2 extraction hierarchy.extract (C-to-RTL mapping table)
+  3 IP gen     instrument.Instrumenter (+ counters, buffer spill)
+  4 system     incremental (trace cache, decoupled base executable)
+  5 results    report (timeline / table / bump chart), oracle (ILA check)
+Plus: overhead (analytical resource model), dse (automated DSE).
+"""
+from repro.core.pragma import ProbeConfig, ProbedFunction, probe
+from repro.core.hierarchy import Hierarchy, extract
+from repro.core.oracle import Oracle
+from repro.core.report import Report, bump_chart
+from repro.core.dse import run_dse, DSEResult
+from repro.core.incremental import measure_incremental
+from repro.core.overhead import OverheadModel, measure_overhead, adapt_allocation
+
+__all__ = [
+    "probe", "ProbeConfig", "ProbedFunction", "Hierarchy", "extract",
+    "Oracle", "Report", "bump_chart", "run_dse", "DSEResult",
+    "measure_incremental", "OverheadModel", "measure_overhead",
+    "adapt_allocation",
+]

@@ -1,0 +1,64 @@
+"""Bounded on-device ring buffers + host ("DRAM") offload sink.
+
+The paper's performance counters buffer (start, end) timestamps in shift
+registers / BRAM and assert a dump signal to spill to DRAM when full.
+Here the ring lives in the on-device ProbeState; when a spill-enabled
+probe's ring fills, an *ordered* ``io_callback`` ships the full row to
+the host sink below, which reassembles the complete per-iteration
+history. Equality tests run with spills on AND off — the totals must be
+identical (offload must never lose cycles).
+"""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.counters import c64_to_int
+
+
+class HostSink:
+    """Host-side store for offloaded probe records."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._rows: Dict[int, List[Tuple[int, np.ndarray]]] = defaultdict(list)
+        self.dumps = 0
+        self.bytes_received = 0
+
+    def reset(self):
+        with self._lock:
+            self._rows.clear()
+            self.dumps = 0
+            self.bytes_received = 0
+
+    def dump(self, probe_id: int, should_dump, base_count, ring_row):
+        """io_callback target. ring_row: (depth, 2, 2) uint32."""
+        if not bool(np.asarray(should_dump)):
+            return
+        row = np.asarray(ring_row).copy()
+        with self._lock:
+            self._rows[int(probe_id)].append((int(np.asarray(base_count)), row))
+            self.dumps += 1
+            self.bytes_received += row.nbytes
+
+    def records(self, probe_id: int) -> List[Tuple[int, int]]:
+        """All offloaded (start_cycle, end_cycle) records, in order."""
+        out: List[Tuple[int, int]] = []
+        with self._lock:
+            rows = sorted(self._rows.get(probe_id, []), key=lambda r: r[0])
+        for _base, row in rows:
+            starts = c64_to_int(row[:, 0])
+            ends = c64_to_int(row[:, 1])
+            for s, e in zip(np.atleast_1d(starts), np.atleast_1d(ends)):
+                out.append((int(s), int(e)))
+        return out
+
+
+def state_bytes(n_probes: int, depth: int) -> int:
+    """On-device profiler state footprint (the resource-model 'FF' term)."""
+    per_probe = 4 * 8 + 4            # starts/ends/totals/last (u32 pairs) + calls
+    ring = depth * 2 * 2 * 4         # (depth, start/end, hi/lo) u32
+    return 8 + n_probes * (per_probe + ring)

@@ -1,0 +1,196 @@
+"""Deterministic TPU-v5e analytical cycle model (the profiler's "clock").
+
+Every jaxpr equation gets an integer cycle cost derived from its FLOPs
+and memory traffic against the hardware constants below. The SAME static
+table drives (a) the in-device instrumented counters, (b) the oracle
+("ILA") interpreter, and (c) the static ("C-synth") estimate — which is
+what makes the paper's 100%-accuracy experiment exact here, and keeps the
+profiler output dimensionally consistent with §Roofline.
+
+On a real TPU deployment the ``CycleSource`` seam in ``instrument.py``
+swaps this model clock for hardware timestamps; nothing else changes.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax import core
+
+# -------------------------------------------------- hardware constants
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s/link (reference; used by roofline)
+CLOCK_HZ = 940e6                  # TPU v5e core clock
+
+FLOPS_PER_CYCLE = PEAK_FLOPS_BF16 / CLOCK_HZ      # ~209574
+HBM_BYTES_PER_CYCLE = HBM_BW / CLOCK_HZ           # ~871
+ICI_BYTES_PER_CYCLE = ICI_BW / CLOCK_HZ           # ~53
+
+# transcendental elementwise ops cost more VPU work per element
+_TRANSCENDENTAL = {
+    "exp", "log", "log1p", "expm1", "tanh", "logistic", "erf", "erfc",
+    "erf_inv", "sin", "cos", "tan", "pow", "rsqrt", "sqrt", "cbrt",
+    "atan2", "digamma", "lgamma",
+}
+_NO_FLOP = {
+    "reshape", "transpose", "broadcast_in_dim", "squeeze", "slice",
+    "dynamic_slice", "dynamic_update_slice", "concatenate", "pad", "rev",
+    "gather", "scatter", "scatter-add", "convert_element_type",
+    "bitcast_convert_type", "copy", "iota", "stop_gradient", "select_n",
+    "split",
+}
+_COLLECTIVES = {
+    "psum", "all_gather", "reduce_scatter", "all_to_all", "ppermute",
+    "psum_scatter", "pmax", "pmin",
+}
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def _aval_size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape))
+    except Exception:
+        return 0
+
+
+@dataclass(frozen=True)
+class EqnCost:
+    flops: int
+    bytes: int
+    comm_bytes: int
+    cycles: int
+
+
+def _dot_flops(eqn) -> int:
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs, rhs = (v.aval for v in eqn.invars[:2])
+    batch = int(np.prod([lhs.shape[i] for i in lb])) if lb else 1
+    contract = int(np.prod([lhs.shape[i] for i in lc])) if lc else 1
+    m = int(np.prod([s for i, s in enumerate(lhs.shape)
+                     if i not in lc and i not in lb])) or 1
+    n = int(np.prod([s for i, s in enumerate(rhs.shape)
+                     if i not in rc and i not in rb])) or 1
+    return 2 * batch * m * n * contract
+
+
+def _conv_flops(eqn) -> int:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    out_elems = _aval_size(out)
+    # per output element: 2 * prod(kernel spatial) * in_features
+    k = int(np.prod(rhs.shape[:-1])) if rhs.shape else 1
+    return 2 * out_elems * k
+
+
+def eqn_cost(eqn) -> EqnCost:
+    """Flat cost of one first-order equation (control flow handled by
+    the interpreters, which recurse)."""
+    name = eqn.primitive.name
+    in_bytes = sum(_aval_bytes(v.aval) for v in eqn.invars
+                   if hasattr(v, "aval"))
+    out_bytes = sum(_aval_bytes(v.aval) for v in eqn.outvars)
+    total_bytes = in_bytes + out_bytes
+    comm = 0
+    if name == "dot_general":
+        flops = _dot_flops(eqn)
+    elif name == "ragged_dot":
+        # rows each hit one expert: 2 * rows * K * N
+        lhs = eqn.invars[0].aval
+        rhs = eqn.invars[1].aval
+        flops = 2 * lhs.shape[0] * lhs.shape[1] * rhs.shape[-1]
+    elif name in ("conv_general_dilated",):
+        flops = _conv_flops(eqn)
+    elif name in _COLLECTIVES:
+        comm = in_bytes
+        flops = _aval_size(eqn.outvars[0].aval) if eqn.outvars else 0
+    elif name in _NO_FLOP:
+        flops = 0
+    elif name in _TRANSCENDENTAL:
+        flops = 8 * max((_aval_size(v.aval) for v in eqn.outvars), default=0)
+    elif name in ("reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+                  "reduce_and", "reduce_or", "argmax", "argmin",
+                  "cumsum", "cumlogsumexp", "cummax", "cumprod"):
+        flops = max((_aval_size(v.aval) for v in eqn.invars
+                     if hasattr(v, "aval")), default=0)
+    elif name in ("sort", "top_k"):
+        n = max((_aval_size(v.aval) for v in eqn.invars
+                 if hasattr(v, "aval")), default=1)
+        flops = int(n * max(1, math.log2(max(n, 2))))
+    else:
+        # generic elementwise fallback
+        flops = max((_aval_size(v.aval) for v in eqn.outvars), default=0)
+    cycles = max(1, int(math.ceil(max(flops / FLOPS_PER_CYCLE,
+                                      total_bytes / HBM_BYTES_PER_CYCLE,
+                                      comm / ICI_BYTES_PER_CYCLE))))
+    return EqnCost(flops=int(flops), bytes=int(total_bytes),
+                   comm_bytes=int(comm), cycles=cycles)
+
+
+# ---------------------------------------------- recursive static costs
+
+_SUBJAXPR_PRIMS = {"scan", "while", "cond", "pjit", "jit", "custom_jvp_call",
+                   "custom_vjp_call", "remat", "checkpoint", "shard_map",
+                   "custom_vjp_call_jaxpr", "closed_call", "core_call",
+                   "remat2"}
+
+
+def _sub_jaxprs(eqn):
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if key in eqn.params:
+            yield eqn.params[key]
+    if "cond_jaxpr" in eqn.params:
+        yield eqn.params["cond_jaxpr"]
+        yield eqn.params["body_jaxpr"]
+    if "branches" in eqn.params:
+        yield from eqn.params["branches"]
+
+
+def _as_jaxpr(j):
+    return j.jaxpr if hasattr(j, "jaxpr") else j
+
+
+def static_eqn_cycles(eqn) -> int:
+    """Cycles of one eqn for a SINGLE execution, recursing into control
+    flow with static trip counts (while counted as one iteration — the
+    'C-synth ?' case; only runtime counters know the truth)."""
+    name = eqn.primitive.name
+    if name == "scan":
+        body = static_jaxpr_cycles(_as_jaxpr(eqn.params["jaxpr"]))
+        return body * int(eqn.params["length"])
+    if name == "while":
+        return (static_jaxpr_cycles(_as_jaxpr(eqn.params["cond_jaxpr"])) * 2 +
+                static_jaxpr_cycles(_as_jaxpr(eqn.params["body_jaxpr"])))
+    if name == "cond":
+        return max(static_jaxpr_cycles(_as_jaxpr(b))
+                   for b in eqn.params["branches"])
+    if name in _SUBJAXPR_PRIMS:
+        subs = list(_sub_jaxprs(eqn))
+        if subs:
+            return sum(static_jaxpr_cycles(_as_jaxpr(s)) for s in subs[:1])
+    return eqn_cost(eqn).cycles
+
+
+def static_jaxpr_cycles(jaxpr) -> int:
+    return sum(static_eqn_cycles(e) for e in jaxpr.eqns)
+
+
+def jaxpr_has_dynamic_cycles(jaxpr) -> bool:
+    """True if cycle count depends on runtime values (while / cond)."""
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name in ("while", "cond"):
+            return True
+        for sub in _sub_jaxprs(eqn):
+            if jaxpr_has_dynamic_cycles(_as_jaxpr(sub)):
+                return True
+    return False

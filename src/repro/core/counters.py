@@ -1,0 +1,63 @@
+"""64-bit performance counters built from uint32 pairs.
+
+The paper's profiler IP builds a 32- or 64-bit global cycle counter out
+of FPGA registers; we do the literal analogue — (hi, lo) uint32 pairs
+with add-with-carry — so counter width never depends on the host's
+``jax_enable_x64`` flag and the 2^64-cycle guarantee holds everywhere.
+
+A counter value is an array whose trailing dimension is 2: ``[..., 0]`` =
+hi word, ``[..., 1]`` = lo word.
+"""
+from __future__ import annotations
+
+from typing import Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+MASK32 = (1 << 32) - 1
+
+
+def c64(value: int = 0):
+    """Scalar counter constant."""
+    return jnp.array([(value >> 32) & MASK32, value & MASK32], U32)
+
+
+def c64_zeros(shape) -> jnp.ndarray:
+    return jnp.zeros(tuple(shape) + (2,), U32)
+
+
+def c64_add(a, b):
+    """a + b for counters with matching shape (..., 2)."""
+    lo = a[..., 1] + b[..., 1]
+    carry = (lo < a[..., 1]).astype(U32)
+    hi = a[..., 0] + b[..., 0] + carry
+    return jnp.stack([hi, lo], axis=-1)
+
+
+def c64_add_int(a, value: int):
+    """a + static python int (may exceed 2^32)."""
+    return c64_add(a, jnp.broadcast_to(c64(value), a.shape))
+
+
+def c64_sub(a, b):
+    """a - b (modular, like hardware counters)."""
+    lo = a[..., 1] - b[..., 1]
+    borrow = (a[..., 1] < b[..., 1]).astype(U32)
+    hi = a[..., 0] - b[..., 0] - borrow
+    return jnp.stack([hi, lo], axis=-1)
+
+
+def c64_to_int(a) -> Union[int, np.ndarray]:
+    """Host-side conversion to python int / int64 ndarray."""
+    arr = np.asarray(a)
+    out = (arr[..., 0].astype(np.uint64) << np.uint64(32)) | \
+        arr[..., 1].astype(np.uint64)
+    if out.ndim == 0:
+        return int(out)
+    return out.astype(np.int64)
+
+
+def int_to_pair(value: int) -> Tuple[int, int]:
+    return (value >> 32) & MASK32, value & MASK32

@@ -1,0 +1,135 @@
+"""Automated design-space exploration (paper §IV-E, Fig 13).
+
+Explores profiling configurations — storage class (register-like shallow
+rings, BRAM-like deep rings, hybrid) x DRAM dump ratio (0/25/50/75%) —
+and scores each on the paper's three metrics:
+
+  1) resource overhead      on-device state bytes + extra HLO equations
+                            (weighted, relative to the base program),
+  2) DRAM bandwidth         measured offloaded bytes / profiled span,
+  3) latency impact         measured wall-time of the instrumented step
+                            relative to the unprobed step (Fmax analogue).
+
+Returns all points plus the Pareto-optimal subset. Incremental
+re-instrumentation (cached trace/hierarchy) is what makes the sweep
+cheap — each point only rebuilds the probe layer, like the paper's
+incremental synthesis.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.buffer import state_bytes
+from repro.core.costmodel import CLOCK_HZ
+from repro.core.counters import c64_to_int
+from repro.core.pragma import ProbeConfig, ProbedFunction, probe
+
+STORAGE_DEPTH = {"registers": 4, "hybrid": 16, "bram": 64}
+
+
+@dataclass
+class DSEPoint:
+    storage: str
+    depth: int
+    offload_ratio: float
+    n_probes: int
+    state_bytes: int
+    extra_eqns: int
+    dram_bytes: int
+    dram_bandwidth_bps: float        # modeled at the TPU clock
+    latency_overhead: float          # measured wall-time ratio - 1
+    weighted_resource: float
+
+    def dominates(self, o: "DSEPoint") -> bool:
+        a = (self.weighted_resource, self.dram_bandwidth_bps,
+             self.latency_overhead)
+        b = (o.weighted_resource, o.dram_bandwidth_bps, o.latency_overhead)
+        return all(x <= y for x, y in zip(a, b)) and a != b
+
+
+@dataclass
+class DSEResult:
+    points: List[DSEPoint]
+    pareto: List[DSEPoint]
+
+    def best(self) -> Optional[DSEPoint]:
+        return min(self.pareto,
+                   key=lambda p: p.weighted_resource + p.latency_overhead,
+                   default=None)
+
+    def table(self) -> str:
+        hdr = (f"{'storage':<10}{'depth':>6}{'dump%':>7}{'probes':>8}"
+               f"{'state_B':>9}{'xeqns':>7}{'dram_B':>8}{'bw_MBps':>9}"
+               f"{'lat_ovh':>9}  pareto")
+        lines = [hdr]
+        ps = {id(p) for p in self.pareto}
+        for p in self.points:
+            lines.append(
+                f"{p.storage:<10}{p.depth:>6}{p.offload_ratio * 100:>6.0f}%"
+                f"{p.n_probes:>8}{p.state_bytes:>9}{p.extra_eqns:>7}"
+                f"{p.dram_bytes:>8}{p.dram_bandwidth_bps / 1e6:>9.3f}"
+                f"{p.latency_overhead * 100:>8.2f}%"
+                f"  {'*' if id(p) in ps else ''}")
+        return "\n".join(lines)
+
+
+def _timeit(f, *args, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = f(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_dse(fn: Callable, args: Sequence[Any],
+            base_cfg: ProbeConfig = ProbeConfig(),
+            storages: Sequence[str] = ("registers", "hybrid", "bram"),
+            offload_ratios: Sequence[float] = (0.0, 0.25, 0.5, 0.75),
+            resource_weights: Tuple[float, float] = (1.0, 1.0),
+            repeats: int = 3) -> DSEResult:
+    from repro.core.overhead import measure_overhead
+
+    base_jit = jax.jit(fn)
+    base_jit(*args)                       # compile
+    t_base = _timeit(base_jit, *args, repeats=repeats)
+    base_eqns = None
+
+    pf = probe(fn, base_cfg)              # shared trace across the sweep
+    pf.trace(*args)
+
+    points: List[DSEPoint] = []
+    for storage in storages:
+        depth = STORAGE_DEPTH[storage]
+        for ratio in offload_ratios:
+            cfg = base_cfg.replace(buffer_depth=depth, offload=ratio)
+            pf.retarget(cfg)
+            pf.sink.reset()
+            out, rec = pf(*args)          # compile + run
+            t_inst = _timeit(pf, *args, repeats=repeats)
+            span = int(c64_to_int(np.asarray(rec["cycle"])))
+            span_s = max(span / CLOCK_HZ, 1e-12)
+            ov = measure_overhead(fn, args, cfg)
+            if base_eqns is None:
+                base_eqns = ov["base_eqns"]
+            sbytes = state_bytes(pf.assignment.n, depth)
+            wres = (resource_weights[0] * sbytes / 1024.0 +
+                    resource_weights[1] * ov["extra_eqns"] /
+                    max(ov["base_eqns"], 1))
+            points.append(DSEPoint(
+                storage=storage, depth=depth, offload_ratio=ratio,
+                n_probes=pf.assignment.n, state_bytes=sbytes,
+                extra_eqns=ov["extra_eqns"],
+                dram_bytes=pf.sink.bytes_received,
+                dram_bandwidth_bps=pf.sink.bytes_received / span_s,
+                latency_overhead=max(t_inst / max(t_base, 1e-12) - 1.0, 0.0),
+                weighted_resource=wres))
+    pareto = [p for p in points
+              if not any(o.dominates(p) for o in points)]
+    return DSEResult(points=points, pareto=pareto)

@@ -1,0 +1,229 @@
+"""Scope-hierarchy extraction from a traced jaxpr (C-to-RTL analogue).
+
+The paper's modified Clang/LLVM flow maps RTL modules/loops back to C
+functions; here ``jax.named_scope`` name-stacks play the role of module
+boundaries and ``lax.scan``/``while`` equations the role of loops. The
+extraction walks the closed jaxpr ONCE (the paper's "extraction is
+performed only once") and produces:
+
+- a ``ScopeNode`` tree (the RTL hierarchy tree of Fig 5),
+- per-equation annotations (``EqnInfo``) that the instrumenter and the
+  oracle replay so all three agree on paths,
+- static cycle estimates per node (the "C-synth report" column),
+- source locations (file:line) per scope — the mapping-table payload.
+
+Transform wrappers in name stacks ('jvp(f)', 'transpose(jvp(f))') are
+normalized: forward scopes keep their names, backward scopes get a
+``~bwd`` suffix — so a probed training step shows forward and backward
+costs of the same module as sibling nodes.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import costmodel as cm
+
+_WRAP_RE = re.compile(r"^(\w+)\((.*)\)$")
+
+
+def normalize_segment(seg: str) -> Tuple[Optional[str], bool]:
+    """'transpose(jvp(layers))' -> ('layers', bwd=True); 'jvp()' -> (None, _)."""
+    bwd = False
+    while True:
+        m = _WRAP_RE.match(seg)
+        if not m:
+            break
+        wrapper, inner = m.group(1), m.group(2)
+        if wrapper == "transpose":
+            bwd = True
+        seg = inner
+    seg = seg.strip()
+    return (seg if seg else None), bwd
+
+
+def normalize_stack(stack_str: str) -> Tuple[str, ...]:
+    """Full name-stack string -> tuple of scope segments."""
+    if not stack_str:
+        return ()
+    segs: List[str] = []
+    bwd_any = False
+    for raw in stack_str.split("/"):
+        name, bwd = normalize_segment(raw)
+        bwd_any = bwd_any or bwd
+        if name:
+            segs.append(name + ("~bwd" if bwd else ""))
+        elif bwd and not segs:
+            bwd_any = True
+    return tuple(segs)
+
+
+@dataclass
+class ScopeNode:
+    name: str
+    path: str
+    kind: str = "scope"               # scope | loop | while | cond | root
+    trip_count: Optional[int] = None  # loops with static length
+    dynamic: bool = False             # subtree contains while/cond
+    opaque: bool = False              # shard_map etc: not probeable inside
+    n_eqns: int = 0                   # eqns directly at this node
+    own_cycles: int = 0               # direct-eqn cycles per single visit
+    static_cycles: int = 0            # subtree cycles per single visit
+    source: str = ""                  # file:line of first eqn (C-to-RTL map)
+    children: "Dict[str, ScopeNode]" = field(default_factory=dict)
+
+    def walk(self):
+        yield self
+        for c in self.children.values():
+            yield from c.walk()
+
+    def find(self, path: str) -> Optional["ScopeNode"]:
+        if path in ("", "/"):
+            return self
+        node = self
+        for seg in path.strip("/").split("/"):
+            node = node.children.get(seg)
+            if node is None:
+                return None
+        return node
+
+
+@dataclass
+class EqnInfo:
+    path: str                          # scope path the eqn lives at
+    sub_path: Optional[str] = None     # control-flow node path (loops etc.)
+    cycles: int = 0                    # flat cycles (leaf eqns)
+
+
+@dataclass
+class Hierarchy:
+    root: ScopeNode
+    eqn_info: Dict[int, EqnInfo]
+    closed_jaxpr: Any
+
+    def node(self, path: str) -> Optional[ScopeNode]:
+        return self.root.find(path)
+
+    def all_paths(self) -> List[str]:
+        return [n.path for n in self.root.walk() if n.path]
+
+    def mapping_table(self) -> List[Dict[str, Any]]:
+        """The C-to-RTL mapping table: scope -> source, kind, static cost."""
+        rows = []
+        for n in self.root.walk():
+            rows.append(dict(path=n.path or "/", kind=n.kind,
+                             source=n.source, n_eqns=n.n_eqns,
+                             static_cycles=n.static_cycles,
+                             trip_count=n.trip_count,
+                             dynamic=n.dynamic))
+        return rows
+
+
+def _source_of(eqn) -> str:
+    try:
+        from jax._src import source_info_util
+        frame = source_info_util.user_frame(eqn.source_info.traceback)
+        if frame is None:
+            return ""
+        return f"{frame.file_name.rsplit('/', 1)[-1]}:{frame.start_line}"
+    except Exception:
+        return ""
+
+
+def _ensure(parent: ScopeNode, name: str, kind: str = "scope") -> ScopeNode:
+    if name not in parent.children:
+        path = f"{parent.path}/{name}" if parent.path else name
+        parent.children[name] = ScopeNode(name=name, path=path, kind=kind)
+    return parent.children[name]
+
+
+def _as_jaxpr(j):
+    return j.jaxpr if hasattr(j, "jaxpr") else j
+
+
+_DESCEND = {"pjit", "jit", "closed_call", "core_call", "custom_jvp_call",
+            "custom_vjp_call", "custom_vjp_call_jaxpr", "remat", "remat2",
+            "checkpoint"}
+_LOOPS = {"scan": "loop", "while": "while"}
+
+
+def extract(closed_jaxpr) -> Hierarchy:
+    root = ScopeNode(name="", path="", kind="root")
+    eqn_info: Dict[int, EqnInfo] = {}
+
+    def walk(jaxpr, prefix_node: ScopeNode, counters: Dict[str, int]):
+        for eqn in jaxpr.eqns:
+            segs = normalize_stack(str(eqn.source_info.name_stack))
+            node = prefix_node
+            for s in segs:
+                node = _ensure(node, s)
+                if not node.source:
+                    node.source = _source_of(eqn)
+            name = eqn.primitive.name
+            if name in _LOOPS:
+                idx = counters.get(node.path + "#" + name, 0)
+                counters[node.path + "#" + name] = idx + 1
+                lname = f"{name}#{idx}"
+                lnode = _ensure(node, lname, kind=_LOOPS[name])
+                lnode.source = lnode.source or _source_of(eqn)
+                eqn_info[id(eqn)] = EqnInfo(path=node.path,
+                                            sub_path=lnode.path)
+                if name == "scan":
+                    lnode.trip_count = int(eqn.params["length"])
+                    walk(_as_jaxpr(eqn.params["jaxpr"]), lnode, counters)
+                else:
+                    lnode.dynamic = True
+                    walk(_as_jaxpr(eqn.params["cond_jaxpr"]),
+                         _ensure(lnode, "cond"), counters)
+                    walk(_as_jaxpr(eqn.params["body_jaxpr"]),
+                         _ensure(lnode, "body"), counters)
+            elif name == "cond":
+                idx = counters.get(node.path + "#cond", 0)
+                counters[node.path + "#cond"] = idx + 1
+                cnode = _ensure(node, f"cond#{idx}", kind="cond")
+                cnode.dynamic = True
+                cnode.source = cnode.source or _source_of(eqn)
+                eqn_info[id(eqn)] = EqnInfo(path=node.path,
+                                            sub_path=cnode.path)
+                for bi, br in enumerate(eqn.params["branches"]):
+                    walk(_as_jaxpr(br), _ensure(cnode, f"branch{bi}"),
+                         counters)
+            elif name in _DESCEND and any(True for _ in cm._sub_jaxprs(eqn)):
+                eqn_info[id(eqn)] = EqnInfo(path=node.path, sub_path=None)
+                for sub in cm._sub_jaxprs(eqn):
+                    walk(_as_jaxpr(sub), node, counters)
+                    break    # only the call jaxpr
+            elif name == "shard_map":
+                # opaque region: costed as a black box, not probeable inside
+                idx = counters.get(node.path + "#smap", 0)
+                counters[node.path + "#smap"] = idx + 1
+                snode = _ensure(node, f"shard_map#{idx}")
+                snode.opaque = True
+                snode.source = snode.source or _source_of(eqn)
+                c = cm.static_eqn_cycles(eqn)
+                snode.n_eqns += 1
+                snode.own_cycles += c
+                eqn_info[id(eqn)] = EqnInfo(path=snode.path, cycles=c)
+            else:
+                c = cm.eqn_cost(eqn).cycles
+                node.n_eqns += 1
+                node.own_cycles += c
+                eqn_info[id(eqn)] = EqnInfo(path=node.path, cycles=c)
+
+    walk(closed_jaxpr.jaxpr, root, {})
+
+    def finalize(node: ScopeNode) -> Tuple[int, bool]:
+        total = node.own_cycles
+        dyn = node.dynamic
+        for c in node.children.values():
+            sub, d = finalize(c)
+            mult = c.trip_count if (c.kind == "loop" and c.trip_count) else 1
+            total += sub * mult
+            dyn = dyn or d or c.kind in ("while", "cond")
+        node.static_cycles = total
+        node.dynamic = dyn
+        return total, dyn
+
+    finalize(root)
+    return Hierarchy(root=root, eqn_info=eqn_info, closed_jaxpr=closed_jaxpr)

@@ -1,0 +1,394 @@
+"""Non-intrusive instrumentation: a jaxpr interpreter that threads a
+ProbeState through the user's program.
+
+This is the RealProbe IP. The user function is traced once (by
+``pragma.probe``); this module re-evaluates the jaxpr equation-by-
+equation, and at **scope boundary transitions only** (the paper's
+edge-triggered sampling) emits counter updates:
+
+    enter(p):  starts[p] (first activation), last[p] = now, ring write
+    exit(p):   ends[p] = now, totals[p] += now - last[p], ring write,
+               calls[p] += 1, optional DRAM spill
+
+Between events the global cycle counter advances by the *statically
+summed* cost-model cycles of the executed segment — one fused add per
+segment instead of one per equation (the analogue of the paper's
+hierarchical read-mux optimization, quantified in bench_overhead).
+
+Decoupling guarantees:
+- instrumentation ops never read or write model tensors (only the state),
+  so enabling probes cannot change model outputs (asserted in tests);
+- scans whose bodies contain no probes / no dynamic control flow are left
+  completely untouched (black-box bind + static cycle fold), keeping the
+  instrumented HLO footprint O(probes), not O(model).
+
+Control flow: scan bodies with probes get the state threaded through the
+carry (per-iteration records, first-``depth`` iterations kept — the
+paper's first-4-iterations truncation); while loops always thread state
+(trip counts are runtime-only — the exact thing C-synth/Co-sim get
+wrong); cond branches thread state so the *taken* branch's cycles are
+counted.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.extend import core
+from jax._src.core import eval_jaxpr as _eval_jaxpr
+
+from repro.core import costmodel as cm
+from repro.core.buffer import HostSink
+from repro.core.counters import (c64, c64_add, c64_add_int, c64_sub,
+                                 c64_zeros, U32)
+from repro.core.hierarchy import Hierarchy
+
+_as_jaxpr = cm._as_jaxpr
+
+
+# --------------------------------------------------------- probe state
+
+def init_state(n_probes: int, depth: int) -> Dict[str, jnp.ndarray]:
+    return {
+        "cycle": c64(0),
+        "starts": c64_zeros((n_probes,)),
+        "ends": c64_zeros((n_probes,)),
+        "totals": c64_zeros((n_probes,)),
+        "last": c64_zeros((n_probes,)),
+        "calls": jnp.zeros((n_probes,), U32),
+        "ring": jnp.zeros((n_probes, depth, 2, 2), U32),
+    }
+
+
+@dataclass
+class ProbeAssignment:
+    paths: Tuple[str, ...]                 # probe id -> scope path
+    depth: int                             # ring depth per probe
+    spill: Tuple[bool, ...]                # probe id -> DRAM offload enabled
+
+    @property
+    def n(self) -> int:
+        return len(self.paths)
+
+    def id_of(self, path: str) -> Optional[int]:
+        try:
+            return self.paths.index(path)
+        except ValueError:
+            return None
+
+
+class CycleSource:
+    """Where 'now' comes from. ``model``: the deterministic cost-model
+    clock (exact, CPU-validatable). ``wallclock``: host-time reads via
+    ordered io_callback (captures real runtime dynamics)."""
+
+    def __init__(self, kind: str):
+        assert kind in ("model", "wallclock")
+        self.kind = kind
+
+    def advance(self, state, static_cycles: int):
+        if static_cycles and self.kind == "model":
+            state = dict(state)
+            state["cycle"] = c64_add_int(state["cycle"], static_cycles)
+        return state
+
+    @staticmethod
+    def _host_now():
+        t = time.perf_counter_ns()
+        return np.array([(t >> 32) & 0xFFFFFFFF, t & 0xFFFFFFFF], np.uint32)
+
+    def now(self, state):
+        if self.kind == "model":
+            return state, state["cycle"]
+        pair = jax.experimental.io_callback(
+            self._host_now, jax.ShapeDtypeStruct((2,), jnp.uint32),
+            ordered=True)
+        state = dict(state)
+        state["cycle"] = pair
+        return state, pair
+
+
+# ------------------------------------------------------ event emitters
+
+def emit_enter(state, pid: int, depth: int, spill: bool, src: CycleSource):
+    state, t = src.now(state)
+    state = dict(state)
+    calls = state["calls"][pid]
+    first = (calls == 0)
+    state["starts"] = state["starts"].at[pid].set(
+        jnp.where(first, t, state["starts"][pid]))
+    state["last"] = state["last"].at[pid].set(t)
+    slot = (calls % depth) if spill else jnp.minimum(calls, depth - 1)
+    write = True if spill else (calls < depth)
+    cur = state["ring"][pid, slot, 0]
+    state["ring"] = state["ring"].at[pid, slot, 0].set(
+        jnp.where(write, t, cur))
+    return state
+
+
+def emit_exit(state, pid: int, depth: int, spill: bool, src: CycleSource,
+              sink: Optional[HostSink]):
+    state, t = src.now(state)
+    state = dict(state)
+    calls = state["calls"][pid]
+    state["ends"] = state["ends"].at[pid].set(t)
+    state["totals"] = state["totals"].at[pid].set(
+        c64_add(state["totals"][pid], c64_sub(t, state["last"][pid])))
+    slot = (calls % depth) if spill else jnp.minimum(calls, depth - 1)
+    write = True if spill else (calls < depth)
+    cur = state["ring"][pid, slot, 1]
+    state["ring"] = state["ring"].at[pid, slot, 1].set(
+        jnp.where(write, t, cur))
+    new_calls = calls + 1
+    state["calls"] = state["calls"].at[pid].set(new_calls)
+    if spill and sink is not None:
+        should = (new_calls % depth) == 0
+        jax.experimental.io_callback(
+            functools.partial(sink.dump, pid), None,
+            should, new_calls - depth, state["ring"][pid],
+            ordered=True)
+    return state
+
+
+# --------------------------------------------------------- interpreter
+
+class Instrumenter:
+    def __init__(self, hierarchy: Hierarchy, assignment: ProbeAssignment,
+                 cycle_source: str = "model",
+                 sink: Optional[HostSink] = None):
+        self.h = hierarchy
+        self.asg = assignment
+        self.src = CycleSource(cycle_source)
+        self.sink = sink
+        # probed-ancestor chains per scope path, precomputed
+        self._chain_cache: Dict[str, Tuple[int, ...]] = {}
+        self._needs_thread_cache: Dict[int, bool] = {}
+
+    # -- static helpers ------------------------------------------------
+    def _chain(self, path: str) -> Tuple[int, ...]:
+        """Probe ids active (outermost first) when executing at ``path``."""
+        if path in self._chain_cache:
+            return self._chain_cache[path]
+        ids: List[int] = []
+        segs = path.split("/") if path else []
+        cur = ""
+        for s in segs:
+            cur = f"{cur}/{s}" if cur else s
+            pid = self.asg.id_of(cur)
+            if pid is not None:
+                ids.append(pid)
+        out = tuple(ids)
+        self._chain_cache[path] = out
+        return out
+
+    def _transition(self, state, old_path: str, new_path: str):
+        """Emit exits/enters for the probed-scope delta old -> new."""
+        a, b = self._chain(old_path), self._chain(new_path)
+        i = 0
+        while i < len(a) and i < len(b) and a[i] == b[i]:
+            i += 1
+        for pid in reversed(a[i:]):
+            state = emit_exit(state, pid, self.asg.depth,
+                              self.asg.spill[pid], self.src, self.sink)
+        for pid in b[i:]:
+            state = emit_enter(state, pid, self.asg.depth,
+                               self.asg.spill[pid], self.src)
+        return state
+
+    def _jaxpr_has_probes(self, jaxpr) -> bool:
+        for eqn in jaxpr.eqns:
+            info = self.h.eqn_info.get(id(eqn))
+            if info is None:
+                continue
+            if self._chain(info.path):
+                return True
+            if info.sub_path and (self._chain(info.sub_path) or
+                                  self.asg.id_of(info.sub_path) is not None):
+                return True
+            for sub in cm._sub_jaxprs(eqn):
+                if self._jaxpr_has_probes(_as_jaxpr(sub)):
+                    return True
+        return False
+
+    def _needs_threading(self, jaxpr) -> bool:
+        key = id(jaxpr)
+        if key not in self._needs_thread_cache:
+            self._needs_thread_cache[key] = (
+                self._jaxpr_has_probes(jaxpr) or
+                cm.jaxpr_has_dynamic_cycles(jaxpr) or
+                self.src.kind == "wallclock")
+        return self._needs_thread_cache[key]
+
+    # -- evaluation ----------------------------------------------------
+    def run(self, closed_jaxpr, args, state):
+        outs, state = self._eval(closed_jaxpr.jaxpr, closed_jaxpr.consts,
+                                 args, state, entry_path="")
+        return outs, state
+
+    def _eval(self, jaxpr, consts, args, state, entry_path: str):
+        env: Dict[Any, Any] = {}
+
+        def read(v):
+            if isinstance(v, core.Literal):
+                return v.val
+            return env[v]
+
+        def write(v, val):
+            env[v] = val
+
+        list(map(write, jaxpr.constvars, consts))
+        list(map(write, jaxpr.invars, args))
+
+        cur_path = entry_path
+        pending = 0          # statically accumulated cycles since last event
+
+        def flush(state):
+            nonlocal pending
+            if pending:
+                state = self.src.advance(state, pending)
+                pending = 0
+            return state
+
+        for eqn in jaxpr.eqns:
+            info = self.h.eqn_info.get(id(eqn))
+            path = info.path if info else cur_path
+            if path != cur_path:
+                state = flush(state)
+                state = self._transition(state, cur_path, path)
+                cur_path = path
+            name = eqn.primitive.name
+            invals = [read(v) for v in eqn.invars]
+            if name == "scan":
+                state = flush(state)    # in-loop timestamps must be current
+                state, outs, pend = self._scan(eqn, invals, state, info)
+                pending += pend
+            elif name == "while":
+                state = flush(state)
+                state, outs = self._while(eqn, invals, state, info)
+            elif name == "cond":
+                state = flush(state)
+                state, outs = self._cond(eqn, invals, state, info)
+            elif name in ("pjit", "jit", "closed_call", "core_call",
+                          "custom_jvp_call", "custom_vjp_call",
+                          "custom_vjp_call_jaxpr", "remat", "remat2",
+                          "checkpoint"):
+                sub = next(iter(cm._sub_jaxprs(eqn)), None)
+                if sub is None:
+                    outs = eqn.primitive.bind(*invals, **eqn.params)
+                    pending += cm.eqn_cost(eqn).cycles
+                else:
+                    cj = sub if hasattr(sub, "consts") else None
+                    state = flush(state)
+                    outs, state = self._eval(
+                        _as_jaxpr(sub), cj.consts if cj else [],
+                        invals, state, entry_path=cur_path)
+            else:
+                outs = eqn.primitive.bind(*invals, **eqn.params)
+                if not isinstance(outs, (list, tuple)):
+                    outs = [outs]
+                pending += (info.cycles if info else
+                            cm.eqn_cost(eqn).cycles)
+            list(map(write, eqn.outvars, list(outs)))
+
+        state = flush(state)
+        state = self._transition(state, cur_path, entry_path)
+        return [read(v) for v in jaxpr.outvars], state
+
+    # -- control flow ---------------------------------------------------
+    def _scan(self, eqn, invals, state, info):
+        p = eqn.params
+        body = p["jaxpr"]                       # ClosedJaxpr
+        nc, ncar = p["num_consts"], p["num_carry"]
+        length = int(p["length"])
+        loop_path = info.sub_path
+        loop_pid = self.asg.id_of(loop_path) if loop_path else None
+        threaded = (self._needs_threading(body.jaxpr) or
+                    loop_pid is not None)
+        if not threaded:
+            outs = eqn.primitive.bind(*invals, **eqn.params)
+            pend = length * cm.static_jaxpr_cycles(body.jaxpr)
+            return state, list(outs), pend
+
+        consts = invals[:nc]
+        carry0 = invals[nc:nc + ncar]
+        xs = invals[nc + ncar:]
+
+        def body_fn(carry_state, x):
+            carry, st = carry_state
+            if loop_pid is not None:
+                st = emit_enter(st, loop_pid, self.asg.depth,
+                                self.asg.spill[loop_pid], self.src)
+            outs, st = self._eval(body.jaxpr, body.consts,
+                                  list(consts) + list(carry) + list(x),
+                                  st, entry_path=loop_path or "")
+            if loop_pid is not None:
+                st = emit_exit(st, loop_pid, self.asg.depth,
+                               self.asg.spill[loop_pid], self.src, self.sink)
+            return (tuple(outs[:ncar]), st), tuple(outs[ncar:])
+
+        (carry_f, state), ys = jax.lax.scan(
+            body_fn, (tuple(carry0), state), tuple(xs),
+            length=length, reverse=p["reverse"])
+        return state, list(carry_f) + list(ys), 0
+
+    def _while(self, eqn, invals, state, info):
+        p = eqn.params
+        cnc, bnc = p["cond_nconsts"], p["body_nconsts"]
+        cond_j, body_j = p["cond_jaxpr"], p["body_jaxpr"]
+        cconsts = invals[:cnc]
+        bconsts = invals[cnc:cnc + bnc]
+        carry0 = invals[cnc + bnc:]
+        cond_cycles = cm.static_jaxpr_cycles(cond_j.jaxpr)
+        loop_path = info.sub_path
+        body_path = f"{loop_path}/body" if loop_path else ""
+        loop_pid = self.asg.id_of(loop_path) if loop_path else None
+
+        def cond_fn(carry_state):
+            carry, _ = carry_state
+            outs = _eval_jaxpr(cond_j.jaxpr, cond_j.consts,
+                                   *(list(cconsts) + list(carry)))
+            return outs[0]
+
+        def body_fn(carry_state):
+            carry, st = carry_state
+            st = self.src.advance(st, cond_cycles)
+            if loop_pid is not None:
+                st = emit_enter(st, loop_pid, self.asg.depth,
+                                self.asg.spill[loop_pid], self.src)
+            outs, st = self._eval(body_j.jaxpr, body_j.consts,
+                                  list(bconsts) + list(carry),
+                                  st, entry_path=body_path)
+            if loop_pid is not None:
+                st = emit_exit(st, loop_pid, self.asg.depth,
+                               self.asg.spill[loop_pid], self.src, self.sink)
+            return (tuple(outs), st)
+
+        carry_f, state = jax.lax.while_loop(cond_fn, body_fn,
+                                            (tuple(carry0), state))
+        state = self.src.advance(state, cond_cycles)   # final failed check
+        return state, list(carry_f)
+
+    def _cond(self, eqn, invals, state, info):
+        branches = eqn.params["branches"]
+        index, *ops = invals
+        cond_path = info.sub_path
+
+        def mk(bi, br):
+            def f(ops_state):
+                ops_, st = ops_state
+                outs, st = self._eval(
+                    br.jaxpr, br.consts, list(ops_), st,
+                    entry_path=f"{cond_path}/branch{bi}" if cond_path else "")
+                return tuple(outs), st
+            return f
+
+        outs, state = jax.lax.switch(index,
+                                     [mk(bi, br) for bi, br in
+                                      enumerate(branches)],
+                                     (tuple(ops), state))
+        return state, list(outs)

@@ -1,0 +1,229 @@
+"""Independent oracle interpreter — the paper's ILA cross-check.
+
+Re-derives every probe's counters by *concretely* interpreting the same
+jaxpr in Python (eager per-equation evaluation, Python loops for
+scan/while, Python branch selection for cond) with the same cost table.
+It shares no code path with the on-device instrumented program beyond
+the hierarchy annotations, so exact integer equality of the two is a
+meaningful 100%-accuracy check (Table II analogue).
+
+It also doubles as the "Co-sim" column: cycle-faithful to the model,
+oblivious to real machine dynamics (wallclock mode diverges from it the
+way the board diverges from co-simulation in Fig 1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.extend import core
+from jax._src.core import eval_jaxpr as _eval_jaxpr
+
+from repro.core import costmodel as cm
+from repro.core.hierarchy import Hierarchy
+from repro.core.instrument import ProbeAssignment
+
+_as_jaxpr = cm._as_jaxpr
+
+
+@dataclass
+class OracleCounters:
+    n: int
+    depth: int
+    cycle: int = 0
+    starts: List[int] = field(default_factory=list)
+    ends: List[int] = field(default_factory=list)
+    totals: List[int] = field(default_factory=list)
+    last: List[int] = field(default_factory=list)
+    calls: List[int] = field(default_factory=list)
+    ring: List[List[Tuple[int, int]]] = field(default_factory=list)
+    history: List[List[Tuple[int, int]]] = field(default_factory=list)
+
+    def __post_init__(self):
+        z = [0] * self.n
+        self.starts, self.ends, self.totals = list(z), list(z), list(z)
+        self.last, self.calls = list(z), list(z)
+        self.ring = [[(0, 0)] * self.depth for _ in range(self.n)]
+        self.history = [[] for _ in range(self.n)]
+
+
+class Oracle:
+    def __init__(self, hierarchy: Hierarchy, assignment: ProbeAssignment):
+        self.h = hierarchy
+        self.asg = assignment
+        self._chains: Dict[str, Tuple[int, ...]] = {}
+
+    def _chain(self, path: str) -> Tuple[int, ...]:
+        if path in self._chains:
+            return self._chains[path]
+        ids = []
+        cur = ""
+        for s in (path.split("/") if path else []):
+            cur = f"{cur}/{s}" if cur else s
+            pid = self.asg.id_of(cur)
+            if pid is not None:
+                ids.append(pid)
+        self._chains[path] = tuple(ids)
+        return tuple(ids)
+
+    # -- events ---------------------------------------------------------
+    def _enter(self, st: OracleCounters, pid: int, spill: bool):
+        t = st.cycle
+        if st.calls[pid] == 0:
+            st.starts[pid] = t
+        st.last[pid] = t
+        depth = self.asg.depth
+        slot = st.calls[pid] % depth if spill else min(st.calls[pid], depth - 1)
+        if spill or st.calls[pid] < depth:
+            s_, e_ = st.ring[pid][slot]
+            st.ring[pid][slot] = (t, e_)
+        st.history[pid].append((t, -1))
+
+    def _exit(self, st: OracleCounters, pid: int, spill: bool):
+        t = st.cycle
+        st.ends[pid] = t
+        st.totals[pid] += t - st.last[pid]
+        depth = self.asg.depth
+        slot = st.calls[pid] % depth if spill else min(st.calls[pid], depth - 1)
+        if spill or st.calls[pid] < depth:
+            s_, _ = st.ring[pid][slot]
+            st.ring[pid][slot] = (s_, t)
+        s0, _ = st.history[pid][-1]
+        st.history[pid][-1] = (s0, t)
+        st.calls[pid] += 1
+
+    def _transition(self, st: OracleCounters, old: str, new: str):
+        a, b = self._chain(old), self._chain(new)
+        i = 0
+        while i < len(a) and i < len(b) and a[i] == b[i]:
+            i += 1
+        for pid in reversed(a[i:]):
+            self._exit(st, pid, self.asg.spill[pid])
+        for pid in b[i:]:
+            self._enter(st, pid, self.asg.spill[pid])
+
+    # -- evaluation -------------------------------------------------------
+    def run(self, closed_jaxpr, args) -> OracleCounters:
+        st = OracleCounters(n=self.asg.n, depth=self.asg.depth)
+        self._eval(closed_jaxpr.jaxpr, closed_jaxpr.consts, list(args), st, "")
+        return st
+
+    def _eval(self, jaxpr, consts, args, st: OracleCounters,
+              entry_path: str):
+        env: Dict[Any, Any] = {}
+
+        def read(v):
+            return v.val if isinstance(v, core.Literal) else env[v]
+
+        def write(v, val):
+            env[v] = val
+
+        list(map(write, jaxpr.constvars, consts))
+        list(map(write, jaxpr.invars, args))
+        cur = entry_path
+
+        for eqn in jaxpr.eqns:
+            info = self.h.eqn_info.get(id(eqn))
+            path = info.path if info else cur
+            if path != cur:
+                self._transition(st, cur, path)
+                cur = path
+            name = eqn.primitive.name
+            invals = [read(v) for v in eqn.invars]
+            if name == "scan":
+                outs = self._scan(eqn, invals, st, info)
+            elif name == "while":
+                outs = self._while(eqn, invals, st, info)
+            elif name == "cond":
+                outs = self._cond(eqn, invals, st, info)
+            elif name in ("pjit", "jit", "closed_call", "core_call",
+                          "custom_jvp_call", "custom_vjp_call",
+                          "custom_vjp_call_jaxpr", "remat", "remat2",
+                          "checkpoint"):
+                sub = next(iter(cm._sub_jaxprs(eqn)), None)
+                if sub is None:
+                    outs = eqn.primitive.bind(*invals, **eqn.params)
+                else:
+                    sub_consts = sub.consts if hasattr(sub, "consts") else []
+                    outs = self._eval(_as_jaxpr(sub), sub_consts, invals,
+                                      st, cur)
+            else:
+                outs = eqn.primitive.bind(*invals, **eqn.params)
+                if not isinstance(outs, (list, tuple)):
+                    outs = [outs]
+                st.cycle += info.cycles if info else cm.eqn_cost(eqn).cycles
+            list(map(write, eqn.outvars, list(outs)))
+
+        self._transition(st, cur, entry_path)
+        return [read(v) for v in jaxpr.outvars]
+
+    # -- control flow ------------------------------------------------------
+    def _scan(self, eqn, invals, st, info):
+        p = eqn.params
+        body = p["jaxpr"]
+        nc, ncar = p["num_consts"], p["num_carry"]
+        length = int(p["length"])
+        loop_path = info.sub_path
+        loop_pid = self.asg.id_of(loop_path) if loop_path else None
+        consts = invals[:nc]
+        carry = list(invals[nc:nc + ncar])
+        xs = invals[nc + ncar:]
+        idxs = range(length - 1, -1, -1) if p["reverse"] else range(length)
+        ys_acc: Optional[List[List[Any]]] = None
+        for it in idxs:
+            x_t = [np.asarray(x)[it] for x in xs]
+            if loop_pid is not None:
+                self._enter(st, loop_pid, self.asg.spill[loop_pid])
+            outs = self._eval(body.jaxpr, body.consts,
+                              list(consts) + carry + x_t, st,
+                              loop_path or "")
+            if loop_pid is not None:
+                self._exit(st, loop_pid, self.asg.spill[loop_pid])
+            carry = list(outs[:ncar])
+            ys_t = outs[ncar:]
+            if ys_acc is None:
+                ys_acc = [[] for _ in ys_t]
+            for acc, y in zip(ys_acc, ys_t):
+                acc.append(np.asarray(y))
+        ys = []
+        if ys_acc is not None:
+            for acc in ys_acc:
+                arr = np.stack(acc[::-1] if p["reverse"] else acc)
+                ys.append(arr)
+        return carry + ys
+
+    def _while(self, eqn, invals, st, info):
+        p = eqn.params
+        cnc, bnc = p["cond_nconsts"], p["body_nconsts"]
+        cond_j, body_j = p["cond_jaxpr"], p["body_jaxpr"]
+        cond_cycles = cm.static_jaxpr_cycles(cond_j.jaxpr)
+        cconsts = invals[:cnc]
+        bconsts = invals[cnc:cnc + bnc]
+        carry = list(invals[cnc + bnc:])
+        loop_path = info.sub_path
+        body_path = f"{loop_path}/body" if loop_path else ""
+        loop_pid = self.asg.id_of(loop_path) if loop_path else None
+        while True:
+            pred = _eval_jaxpr(cond_j.jaxpr, cond_j.consts,
+                                   *(list(cconsts) + carry))[0]
+            st.cycle += cond_cycles
+            if not bool(np.asarray(pred)):
+                break
+            if loop_pid is not None:
+                self._enter(st, loop_pid, self.asg.spill[loop_pid])
+            carry = list(self._eval(body_j.jaxpr, body_j.consts,
+                                    list(bconsts) + carry, st, body_path))
+            if loop_pid is not None:
+                self._exit(st, loop_pid, self.asg.spill[loop_pid])
+        return carry
+
+    def _cond(self, eqn, invals, st, info):
+        branches = eqn.params["branches"]
+        index, *ops = invals
+        bi = int(np.clip(int(np.asarray(index)), 0, len(branches) - 1))
+        br = branches[bi]
+        cond_path = info.sub_path
+        return self._eval(br.jaxpr, br.consts, list(ops), st,
+                          f"{cond_path}/branch{bi}" if cond_path else "")

@@ -1,0 +1,156 @@
+"""Analytical instrumentation-overhead model (paper §IV-D).
+
+The paper budgets LUT/FF as
+
+    C_axi + C_pc + C_decode*log2(N) + Σ_i (C_1 + C_2 * D_i)
+
+TPU programs spend "resource" as extra HLO equations and on-device state
+bytes instead; the model keeps the same functional form:
+
+    extra_eqns(N, D, E)  ~=  c0 + c1*E + c2*log2(N+1)
+    state_bytes(N, D)    =   8 + N*(36 + 16*D)          (exact, by layout)
+
+where N = probes, D = ring depth, E = static event sites. The constants
+are fitted once against measured instrumented-jaxpr deltas
+(``bench_overhead`` reproduces the paper's Fig 9 predicted-vs-measured
+plot), then drive the adaptive allocation in ``dse.py``: if predicted
+state exceeds the budget, depth shrinks / probe count is capped — the
+paper's "adjusts the number of profiling modules and queue depths".
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.buffer import state_bytes
+from repro.core.pragma import ProbeConfig, ProbedFunction, probe
+
+
+def count_event_sites(pf: ProbedFunction) -> int:
+    """Static enter/exit emission sites in the instrumented program."""
+    h = pf.hierarchy
+    asg = pf.assignment
+    from repro.core.instrument import Instrumenter
+    interp = Instrumenter(h, asg)
+    sites = 0
+
+    def walk(jaxpr, entry_path):
+        nonlocal sites
+        cur = entry_path
+        for eqn in jaxpr.eqns:
+            info = h.eqn_info.get(id(eqn))
+            path = info.path if info else cur
+            if path != cur:
+                a, b = interp._chain(cur), interp._chain(path)
+                i = 0
+                while i < len(a) and i < len(b) and a[i] == b[i]:
+                    i += 1
+                sites += len(a[i:]) + len(b[i:])
+                cur = path
+            name = eqn.primitive.name
+            if name == "scan":
+                body = eqn.params["jaxpr"].jaxpr
+                if interp._needs_threading(body) or (
+                        info and info.sub_path and
+                        asg.id_of(info.sub_path) is not None):
+                    if info and info.sub_path and \
+                            asg.id_of(info.sub_path) is not None:
+                        sites += 2
+                    walk(body, info.sub_path or "")
+            elif name == "while":
+                if info and info.sub_path and \
+                        asg.id_of(info.sub_path) is not None:
+                    sites += 2
+                walk(eqn.params["body_jaxpr"].jaxpr,
+                     (info.sub_path + "/body") if info and info.sub_path
+                     else "")
+            elif name == "cond":
+                for bi, br in enumerate(eqn.params["branches"]):
+                    walk(br.jaxpr,
+                         f"{info.sub_path}/branch{bi}"
+                         if info and info.sub_path else "")
+            else:
+                import repro.core.costmodel as cm
+                for sub in cm._sub_jaxprs(eqn):
+                    walk(cm._as_jaxpr(sub), cur)
+                    break
+        a, b = interp._chain(cur), interp._chain(entry_path)
+        i = 0
+        while i < len(a) and i < len(b) and a[i] == b[i]:
+            i += 1
+        sites += len(a[i:]) + len(b[i:])
+
+    walk(h.closed_jaxpr.jaxpr, "")
+    return sites
+
+
+def measure_overhead(fn, args, cfg: ProbeConfig) -> Dict[str, Any]:
+    """Measured instrumentation cost: extra jaxpr eqns + state bytes."""
+    base = jax.make_jaxpr(fn)(*args)
+    base_eqns = _total_eqns(base.jaxpr)
+    pf = probe(fn, cfg)
+    pf.trace(*args)
+    pf._build(*args)
+    inst = jax.make_jaxpr(lambda *a: pf._jitted.__wrapped__(*a))(*args)
+    inst_eqns = _total_eqns(inst.jaxpr)
+    n = pf.assignment.n
+    return dict(
+        base_eqns=base_eqns,
+        inst_eqns=inst_eqns,
+        extra_eqns=inst_eqns - base_eqns,
+        n_probes=n,
+        depth=cfg.buffer_depth,
+        event_sites=count_event_sites(pf),
+        state_bytes=state_bytes(n, cfg.buffer_depth),
+    )
+
+
+def _total_eqns(jaxpr) -> int:
+    import repro.core.costmodel as cm
+    total = len(jaxpr.eqns)
+    for eqn in jaxpr.eqns:
+        for sub in cm._sub_jaxprs(eqn):
+            total += _total_eqns(cm._as_jaxpr(sub))
+    return total
+
+
+@dataclass
+class OverheadModel:
+    """extra_eqns ~ c0 + c1*event_sites + c2*log2(N+1)."""
+    coefs: Tuple[float, float, float] = (0.0, 0.0, 0.0)
+
+    @staticmethod
+    def features(sample: Dict[str, Any]) -> List[float]:
+        return [1.0, float(sample["event_sites"]),
+                math.log2(sample["n_probes"] + 1.0)]
+
+    @classmethod
+    def fit(cls, samples: Sequence[Dict[str, Any]]) -> "OverheadModel":
+        X = np.array([cls.features(s) for s in samples])
+        y = np.array([s["extra_eqns"] for s in samples], dtype=float)
+        coefs, *_ = np.linalg.lstsq(X, y, rcond=None)
+        return cls(coefs=tuple(float(c) for c in coefs))
+
+    def predict_eqns(self, sample: Dict[str, Any]) -> float:
+        return float(np.dot(self.coefs, self.features(sample)))
+
+    @staticmethod
+    def predict_state_bytes(n_probes: int, depth: int) -> int:
+        return state_bytes(n_probes, depth)
+
+
+def adapt_allocation(n_candidates: int, depth: int, budget_bytes: int
+                     ) -> Tuple[int, int]:
+    """Paper §IV-D resource-allocation adaptation: fit (N, D) under a
+    state-byte budget, preferring to keep probes and shrink depth."""
+    d = depth
+    while d > 1 and state_bytes(n_candidates, d) > budget_bytes:
+        d //= 2
+    n = n_candidates
+    while n > 1 and state_bytes(n, d) > budget_bytes:
+        n -= 1
+    return n, d

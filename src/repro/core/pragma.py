@@ -1,0 +1,179 @@
+"""The user-facing probe API — the ``#pragma HLS RealProbe`` analogue.
+
+One call, zero model edits::
+
+    pf = probe(train_step, ProbeConfig(targets=("loss/layers",)))
+    (loss, new_state), record = pf(params, batch)      # jitted inside
+    print(pf.report(record))
+
+The first call traces the function ONCE, extracts the hierarchy, selects
+probes, and builds + jit-compiles the instrumented evaluator. Changing
+probe targets afterwards (``pf.retarget(...)``) reuses the cached trace
+and hierarchy — the incremental-synthesis analogue, measured in
+``bench_incremental``. The *unprobed* function's own jit executable is
+never touched.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import inline as inline_mod
+from repro.core.buffer import HostSink, state_bytes
+from repro.core.hierarchy import Hierarchy, extract
+from repro.core.instrument import Instrumenter, ProbeAssignment, init_state
+from repro.core.oracle import Oracle, OracleCounters
+from repro.core.report import Report, build_report
+
+
+@dataclass(frozen=True)
+class ProbeConfig:
+    targets: Tuple[str, ...] = ("",)      # subtree roots ("" = everything)
+    depth_limit: Optional[int] = None     # max hierarchy depth below target
+    max_probes: int = 50                  # paper's conservative default
+    buffer_depth: int = 4                 # iteration records kept on-chip
+    offload: float = 0.0                  # fraction of probes that DRAM-spill
+                                          # when their ring fills (paper's
+                                          # 0/25/50/75% dump ratios)
+    cycle_source: str = "model"           # model | wallclock
+    inline: str = "default"               # default | off_all | off_top
+
+    def replace(self, **kw) -> "ProbeConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def _select_probes(h: Hierarchy, cfg: ProbeConfig) -> Tuple[str, ...]:
+    eligible = set(inline_mod.selectable_paths(h, cfg.inline, cfg.targets))
+    tset = [t.strip("/") for t in cfg.targets]
+
+    def in_target(path: str) -> bool:
+        return any(t == "" or path == t or path.startswith(t + "/")
+                   for t in tset)
+
+    chosen = []
+    for node in h.root.walk():          # preorder: shallow scopes first
+        p = node.path
+        if not p or p not in eligible or not in_target(p):
+            continue
+        if cfg.depth_limit is not None:
+            rel_depth = p.count("/") + 1
+            for t in tset:
+                if t and (p == t or p.startswith(t + "/")):
+                    rel_depth = p[len(t):].count("/")
+                    break
+            if rel_depth > cfg.depth_limit:
+                continue
+        chosen.append(p)
+        if len(chosen) >= cfg.max_probes:
+            break
+    return tuple(chosen)
+
+
+class ProbedFunction:
+    """Instrumented wrapper around a traced user function."""
+
+    def __init__(self, fn: Callable, config: ProbeConfig = ProbeConfig()):
+        self.fn = fn
+        self.config = config
+        self.sink = HostSink()
+        self._hierarchy: Optional[Hierarchy] = None
+        self._trace_key = None
+        self._assignment: Optional[ProbeAssignment] = None
+        self._jitted = None
+        self.timings: Dict[str, float] = {}
+
+    # -- stage 2: module extraction (once) ------------------------------
+    def trace(self, *args, **kwargs) -> Hierarchy:
+        key = jax.tree_util.tree_structure((args, kwargs)), tuple(
+            (a.shape, str(a.dtype)) for a in jax.tree_util.tree_leaves(
+                (args, kwargs)) if hasattr(a, "shape"))
+        if self._hierarchy is None or key != self._trace_key:
+            t0 = time.perf_counter()
+            closed = jax.make_jaxpr(self.fn)(*args, **kwargs)
+            self._out_tree = jax.tree_util.tree_structure(
+                jax.eval_shape(self.fn, *args, **kwargs))
+            t1 = time.perf_counter()
+            self._hierarchy = extract(closed)
+            self._trace_key = key
+            self._jitted = None
+            self.timings["trace_s"] = t1 - t0
+            self.timings["extract_s"] = time.perf_counter() - t1
+        return self._hierarchy
+
+    @property
+    def hierarchy(self) -> Hierarchy:
+        if self._hierarchy is None:
+            raise RuntimeError("call .trace(*args) or the function first")
+        return self._hierarchy
+
+    # -- stage 3: RealProbe IP generation --------------------------------
+    def _build(self, *args, **kwargs):
+        h = self.trace(*args, **kwargs)
+        t0 = time.perf_counter()
+        paths = _select_probes(h, self.config)
+        import math as _math
+        n_spill = int(_math.ceil(float(self.config.offload) * len(paths)))
+        spill = tuple(i < n_spill for i in range(len(paths)))
+        self._assignment = ProbeAssignment(paths=paths,
+                                           depth=self.config.buffer_depth,
+                                           spill=spill)
+        interp = Instrumenter(h, self._assignment,
+                              cycle_source=self.config.cycle_source,
+                              sink=self.sink)
+
+        def instrumented(*a, **kw):
+            flat = jax.tree_util.tree_leaves((a, kw))
+            state = init_state(self._assignment.n, self.config.buffer_depth)
+            outs, state = interp.run(h.closed_jaxpr, flat, state)
+            return jax.tree_util.tree_unflatten(self._out_tree, outs), state
+
+        self._jitted = jax.jit(instrumented)
+        self.timings["instrument_s"] = time.perf_counter() - t0
+
+    # -- public ----------------------------------------------------------
+    def __call__(self, *args, **kwargs):
+        if self._jitted is None:
+            self._build(*args, **kwargs)
+        return self._jitted(*args, **kwargs)
+
+    def retarget(self, config: ProbeConfig) -> "ProbedFunction":
+        """Incremental re-instrumentation: reuses the cached trace +
+        hierarchy; only probe selection and the instrumented evaluator
+        are rebuilt (paper §IV-C.2)."""
+        self.config = config
+        self._jitted = None
+        return self
+
+    @property
+    def assignment(self) -> ProbeAssignment:
+        if self._assignment is None:
+            raise RuntimeError("not built yet")
+        return self._assignment
+
+    def probe_paths(self) -> Tuple[str, ...]:
+        return self.assignment.paths
+
+    def resource_bytes(self) -> int:
+        return state_bytes(self.assignment.n, self.config.buffer_depth)
+
+    # -- verification / reporting ------------------------------------------
+    def oracle(self, *args, **kwargs) -> OracleCounters:
+        if self._assignment is None:
+            self._build(*args, **kwargs)
+        flat = jax.tree_util.tree_leaves((args, kwargs))
+        return Oracle(self.hierarchy, self._assignment).run(
+            self.hierarchy.closed_jaxpr, flat)
+
+    def report(self, record: Dict[str, Any]) -> Report:
+        return build_report(self.hierarchy, self.assignment, record,
+                            self.sink, cycle_source=self.config.cycle_source)
+
+
+def probe(fn: Callable, config: ProbeConfig = ProbeConfig()) -> ProbedFunction:
+    """Single-directive activation (the pragma)."""
+    return ProbedFunction(fn, config)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, PipelineState, TokenPipeline
+
+__all__ = ["DataConfig", "PipelineState", "TokenPipeline"]

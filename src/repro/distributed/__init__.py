@@ -1,0 +1,5 @@
+# NOTE: steps.py imports repro.models which imports repro.distributed.sharding;
+# keep this __init__ free of step imports to avoid the cycle.
+from repro.distributed import sharding
+
+__all__ = ["sharding"]

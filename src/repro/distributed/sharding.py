@@ -1,0 +1,181 @@
+"""Logical-axis sharding: rules mapping logical axes -> mesh axes.
+
+Model code annotates activations with ``shard(x, "batch", "seq", "ff")``
+and parameters carry logical axes in their schema. A *rule set* (a dict
+``logical -> mesh axis | tuple | None``) resolves those names. When no
+rule set is active (single-device smoke tests) everything is a no-op, so
+the model code is mesh-agnostic — the same non-intrusiveness stance the
+paper takes for its profiler.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE_RULES: contextvars.ContextVar[Optional[Dict[str, Any]]] = \
+    contextvars.ContextVar("repro_axis_rules", default=None)
+
+
+# Rule sets. ``pod`` only exists on the multi-pod mesh; resolution drops
+# mesh axes that are absent from the active mesh.
+TRAIN_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    # FSDP: weight embed-dim sharded over data AND pod (ZeRO-3 across
+    # pods — param/optimizer state halves again on the multi-pod mesh;
+    # the cross-DCI gathers are the price, and what int8_ef compression
+    # and microbatch overlap are for). Single-pod meshes filter "pod"
+    # out automatically.
+    "embed": ("pod", "data"),
+    "vocab": "model",
+    "ff": "model",
+    "q_heads": "model",
+    "kv_heads": "model",
+    "q_per_kv": None,
+    "head_dim": None,
+    "expert": None,           # experts replicated; expert d_ff TP-sharded
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+    "ssm_head_dim": None,
+    "ssm_state": None,
+    "conv": None,
+    "layers": None,
+    "kv_seq": None,
+    # Megatron-style sequence parallelism for the residual stream: the
+    # between-layer carry (what remat stashes per layer!) is sharded over
+    # the model axis on seq; GSPMD inserts the all-gather before attention
+    # and the reduce-scatter after per-token blocks. 16x smaller stash.
+    "act_seq": "model",
+}
+
+# Serving: batch over (pod, data); KV cache sequence-sharded over the
+# model axis (distributed split-KV decode — always divisible, unlike
+# kv_heads which is < 16 on most assigned archs).
+SERVE_RULES: Dict[str, Any] = dict(TRAIN_RULES)
+SERVE_RULES.update({"batch": ("pod", "data"), "embed": "data",
+                    "kv_seq": "model"})
+
+# long_500k (global_batch=1): batch can't shard — spread the KV/state
+# sequence over BOTH axes (524288 / 256 = 2048 per device).
+SERVE_LONG_RULES: Dict[str, Any] = dict(SERVE_RULES)
+SERVE_LONG_RULES.update({"batch": "pod", "kv_seq": ("model", "data")})
+
+
+@contextlib.contextmanager
+def axis_rules(rules: Optional[Dict[str, Any]], mesh: Optional[Mesh] = None):
+    """Activate a rule set (optionally filtered to the mesh's axis names)."""
+    if rules is not None and mesh is not None:
+        rules = filter_rules(rules, mesh)
+    tok = _ACTIVE_RULES.set(rules)
+    try:
+        yield
+    finally:
+        _ACTIVE_RULES.reset(tok)
+
+
+def filter_rules(rules: Dict[str, Any], mesh: Mesh) -> Dict[str, Any]:
+    """Drop mesh axes that don't exist on ``mesh`` from every rule."""
+    names = set(mesh.axis_names)
+
+    def fix(v):
+        if v is None:
+            return None
+        if isinstance(v, str):
+            return v if v in names else None
+        v = tuple(a for a in v if a in names)
+        return v if len(v) > 1 else (v[0] if v else None)
+
+    return {k: fix(v) for k, v in rules.items()}
+
+
+def current_rules() -> Optional[Dict[str, Any]]:
+    return _ACTIVE_RULES.get()
+
+
+def _mesh_axis_sizes(mesh) -> Dict[str, int]:
+    try:
+        return dict(mesh.shape)
+    except Exception:
+        return {n: s for n, s in zip(mesh.axis_names, mesh.axis_sizes)}
+
+
+def to_pspec(axes: Sequence[Any], rules: Dict[str, Any],
+             shape: Optional[Sequence[int]] = None,
+             mesh=None) -> P:
+    """Resolve logical axis names to a PartitionSpec.
+
+    - a mesh axis may shard at most one dimension (later dup dropped);
+    - with ``shape``+``mesh``: any dimension NOT divisible by its mesh
+      axis size falls back to replication (e.g. kv_heads=8 or q_heads=36
+      on a model=16 mesh). This is the production divisibility rule —
+      GSPMD input shardings must tile evenly.
+    """
+    sizes = _mesh_axis_sizes(mesh) if mesh is not None else None
+    manual: set = set()
+    if mesh is not None:
+        try:
+            from jax.sharding import AxisType
+            manual = {n for n, t in zip(mesh.axis_names, mesh.axis_types)
+                      if t == AxisType.Manual}
+        except Exception:
+            manual = set()
+    used: set = set()
+    parts = []
+    for i, a in enumerate(axes):
+        r = rules.get(a) if a is not None else None
+        if r is None:
+            parts.append(None)
+            continue
+        rt = (r,) if isinstance(r, str) else tuple(r)
+        # axes already Manual (inside a partial shard_map) are implicit
+        rt = tuple(x for x in rt if x not in used and x not in manual)
+        if sizes is not None and shape is not None and rt:
+            total = 1
+            for x in rt:
+                total *= sizes.get(x, 1)
+            if total == 0 or shape[i] % total != 0:
+                parts.append(None)
+                continue
+        used.update(rt)
+        parts.append(rt if len(rt) > 1 else (rt[0] if rt else None))
+    return P(*parts)
+
+
+def shard(x, *axes):
+    """Apply a sharding constraint by logical axis names (no-op w/o rules)."""
+    rules = _ACTIVE_RULES.get()
+    if rules is None:
+        return x
+    if x.ndim != len(axes):
+        raise ValueError(f"rank {x.ndim} vs axes {axes}")
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        mesh = None
+    if mesh is None or not getattr(mesh, "axis_names", None):
+        return x
+    spec = to_pspec(axes, rules, shape=x.shape, mesh=mesh)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _is_param(x):
+    from repro.models.layers import Param
+    return isinstance(x, Param)
+
+
+def schema_pspecs(schema: Any, rules: Dict[str, Any], mesh) -> Any:
+    """Param-schema tree -> divisibility-resolved PartitionSpec tree."""
+    rules = filter_rules(rules, mesh)
+    return jax.tree_util.tree_map(
+        lambda p: to_pspec(p.axes, rules, shape=p.shape, mesh=mesh),
+        schema, is_leaf=_is_param)
+
+
+def param_shardings(schema: Any, mesh: Mesh, rules: Dict[str, Any]) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), schema_pspecs(schema, rules, mesh),
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+- flash_attention: causal GQA flash attention (+ decoupled probe counters)
+- ssd_scan: Mamba-2 SSD chunked scan with VMEM-carried state
+Each has a jit wrapper in ops.py and a pure-jnp oracle in ref.py.
+"""
+from repro.kernels import ops, ref  # noqa: F401

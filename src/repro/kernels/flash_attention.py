@@ -1,0 +1,158 @@
+"""Causal GQA flash attention — Pallas TPU kernel.
+
+TPU-native adaptation (HBM->VMEM tiling, MXU-aligned 128x128 blocks,
+f32 running-softmax state in VMEM scratch, sequential kv grid dim).
+
+RealProbe tie-in: the kernel optionally emits a **decoupled probe
+output** — per (batch, head, q-block) counters of kv blocks visited vs
+actually computed (causal skip). Exactly like the paper's profiler IP,
+the counters live in separate storage, are written on "control events"
+only (block entry), and do not touch the datapath, so enabling them
+cannot change the attention output.
+
+Grid: (B, H, num_q_blocks, num_kv_blocks); the kv dim is innermost and
+sequential ("arbitrary") so the scratch accumulator carries across it.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = float("-inf")
+
+_SEMANTICS = ("parallel", "parallel", "parallel", "arbitrary")
+
+
+def _compiler_params(interpret: bool):
+    if interpret:
+        return None
+    if hasattr(pltpu, "CompilerParams"):             # jax >= 0.7 style
+        return pltpu.CompilerParams(dimension_semantics=_SEMANTICS)
+    return dict(mosaic=dict(dimension_semantics=_SEMANTICS))
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, probe_ref,
+                  acc_ref, m_ref, l_ref,
+                  *, block_q: int, block_k: int, causal: bool,
+                  sm_scale: float, with_probe: bool):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        if with_probe:
+            probe_ref[...] = jnp.zeros_like(probe_ref)
+
+    should_compute = (iq * block_q >= ik * block_k) if causal else True
+
+    if with_probe:
+        # control-event counters: [0]=blocks visited, [1]=blocks computed
+        probe_ref[0, 0, 0, 0] += 1
+        probe_ref[0, 0, 0, 1] += jnp.where(should_compute, 1, 0).astype(
+            probe_ref.dtype)
+
+    @pl.when(should_compute)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale  # (bq, bk)
+        if causal:
+            q_pos = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            k_pos = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe[:, None])
+        corr = jnp.where(jnp.isneginf(m_prev), 0.0,
+                         jnp.exp(m_prev - m_safe))
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        v = v_ref[0, 0].astype(jnp.float32)            # (bk, D)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = m_new
+
+    last_k = jnp.minimum(iq * block_q // block_k, nk - 1) if causal else nk - 1
+
+    @pl.when(ik == last_k)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-37)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    with_probe: bool = False,
+                    interpret: bool = False):
+    """q: (B, H, S, D); k, v: (B, Hkv, S, D), H % Hkv == 0.
+
+    Returns (B, H, S, D) [, probe (B, H, nq, 2) int32 if with_probe].
+    """
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    if H % Hkv:
+        raise ValueError(f"H {H} % Hkv {Hkv}")
+    qpk = H // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    if S % block_q or S % block_k:
+        raise ValueError(f"S {S} not divisible by blocks ({block_q},{block_k})")
+    nq, nk = S // block_q, S // block_k
+    sm_scale = 1.0 / math.sqrt(D)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, causal=causal,
+        sm_scale=sm_scale, with_probe=with_probe)
+
+    out_shape = [jax.ShapeDtypeStruct((B, H, S, D), q.dtype)]
+    out_specs = [pl.BlockSpec((1, 1, block_q, D),
+                              lambda b, h, i, j: (b, h, i, 0))]
+    out_shape.append(jax.ShapeDtypeStruct((B, H, nq, 2), jnp.int32))
+    out_specs.append(pl.BlockSpec((1, 1, 1, 2),
+                                  lambda b, h, i, j: (b, h, i, 0)))
+
+    grid = (B, H, nq, nk)
+    res = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j: (b, h // qpk, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, i, j: (b, h // qpk, j, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),   # acc
+            pltpu.VMEM((block_q,), jnp.float32),     # m
+            pltpu.VMEM((block_q,), jnp.float32),     # l
+        ],
+        compiler_params=_compiler_params(interpret),
+        interpret=interpret,
+    )(q, k, v)
+    out, probe = res
+    if with_probe:
+        return out, probe
+    return out

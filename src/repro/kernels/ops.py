@@ -1,0 +1,60 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On non-TPU backends the kernels execute in ``interpret=True`` mode (the
+kernel body runs as traced JAX ops — bit-identical math, CPU-validatable),
+which is how the test suite sweeps shapes/dtypes against ``ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "with_probe", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, with_probe: bool = False,
+                    interpret: bool | None = None):
+    """q: (B, H, S, D); k, v: (B, Hkv, S, D). See kernels.flash_attention."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, with_probe=with_probe,
+                               interpret=interpret)
+
+
+def flash_attention_gqa(q, k, v, *, causal: bool = True,
+                        interpret: bool | None = None):
+    """Model-layout adapter: q (B,S,kv,qpk,hd); k,v (B,S,kv,hd)."""
+    B, S, KV, G, HD = q.shape
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B, KV * G, S, HD)
+    kf = k.transpose(0, 2, 1, 3)
+    vf = v.transpose(0, 2, 1, 3)
+    o = flash_attention(qf, kf, vf, causal=causal, interpret=interpret)
+    return o.reshape(B, KV, G, S, HD).transpose(0, 3, 1, 2, 4)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "h_per_g", "interpret"))
+def ssd_scan(x, a, b, c, *, chunk: int = 256, h_per_g: int | None = None,
+             interpret: bool | None = None):
+    """Model-layout adapter: x (B,L,H,P); a (B,L,H); b,c (B,L,G,N).
+
+    Returns y (B, L, H, P).
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    xk = x.transpose(0, 2, 1, 3)
+    ak = a.transpose(0, 2, 1)
+    bk = b.transpose(0, 2, 1, 3)
+    ck = c.transpose(0, 2, 1, 3)
+    y = _ssd.ssd_scan(xk, ak, bk, ck, chunk=chunk, interpret=interpret)
+    return y.transpose(0, 2, 1, 3)

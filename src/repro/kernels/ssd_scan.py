@@ -1,0 +1,102 @@
+"""Mamba-2 SSD chunked scan — Pallas TPU kernel.
+
+TPU-native adaptation of the SSD algorithm [arXiv:2405.21060]: the
+sequence is tiled into VMEM-resident chunks; each grid step computes the
+intra-chunk quadratic term on the MXU and carries the running SSM state
+(P x N, f32) in VMEM scratch across the *sequential* chunk grid
+dimension — the TPU analogue of the GPU kernel's cross-CTA state passing
+(no TPU equivalent of grid-sync exists; the sequential-innermost-grid-dim
+contract replaces it, as documented in DESIGN.md).
+
+Grid: (B, H, n_chunks), chunk dim innermost/sequential.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_SEMANTICS = ("parallel", "parallel", "arbitrary")
+
+
+def _compiler_params(interpret: bool):
+    if interpret:
+        return None
+    if hasattr(pltpu, "CompilerParams"):
+        return pltpu.CompilerParams(dimension_semantics=_SEMANTICS)
+    return dict(mosaic=dict(dimension_semantics=_SEMANTICS))
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_scratch,
+                *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scratch[...] = jnp.zeros_like(state_scratch)
+
+    x = x_ref[0, 0].astype(jnp.float32)            # (Q, P)
+    a = a_ref[0, 0].astype(jnp.float32)            # (Q,)
+    b = b_ref[0, 0].astype(jnp.float32)            # (Q, N)
+    c = c_ref[0, 0].astype(jnp.float32)            # (Q, N)
+
+    a_cs = jnp.cumsum(a)                           # (Q,)
+    # intra-chunk: y_diag[q] = sum_{k<=q} exp(a_cs[q]-a_cs[k]) (c_q.b_k) x_k
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    seg = a_cs[:, None] - a_cs[None, :]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    ki = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(qi >= ki, jnp.exp(seg), 0.0)
+    y_diag = jax.lax.dot_general(cb * decay, x, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    # inter-chunk: y_off[q] = exp(a_cs[q]) * c_q . state  (state: (P, N))
+    state = state_scratch[...]
+    y_off = jax.lax.dot_general(c, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_off = y_off * jnp.exp(a_cs)[:, None]
+    y_ref[0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+    # state update: state' = exp(a_cs[-1]) * state + sum_k d_k x_k b_k^T
+    decay_states = jnp.exp(a_cs[-1] - a_cs)        # (Q,)
+    xb = jax.lax.dot_general(x * decay_states[:, None], b,
+                             (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (P, N)
+    state_scratch[...] = state * jnp.exp(a_cs[-1]) + xb
+
+
+def ssd_scan(x, a, b, c, *, chunk: int = 256, interpret: bool = False):
+    """x: (B, H, L, P); a: (B, H, L); b, c: (B, G, L, N), H % G == 0.
+
+    Returns y (B, H, L, P) in x.dtype. L % chunk must be 0.
+    """
+    B, H, L, P = x.shape
+    G, N = b.shape[1], b.shape[3]
+    if H % G:
+        raise ValueError(f"H {H} % G {G}")
+    e = H // G
+    if L % chunk:
+        raise ValueError(f"L {L} % chunk {chunk}")
+    nc = L // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    grid = (B, H, nc)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, P), lambda bi, h, ci: (bi, h, ci, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bi, h, ci: (bi, h, ci)),
+            pl.BlockSpec((1, 1, chunk, N), lambda bi, h, ci: (bi, h // e, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda bi, h, ci: (bi, h // e, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, P),
+                               lambda bi, h, ci: (bi, h, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, L, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=_compiler_params(interpret),
+        interpret=interpret,
+    )(x, a, b, c)

@@ -1,0 +1,87 @@
+"""Collective-bytes extraction from compiled HLO text.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+compiled module: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op contributes per-device *wire bytes*
+under the standard ring model, using its result shape and the replica
+group size G parsed from the op:
+
+    all-gather          out_bytes * (G-1)/G          (each device receives
+                                                      everyone else's shard)
+    reduce-scatter      out_bytes * (G-1)            (operand = out*G; ring
+                                                      sends (G-1)/G of it)
+    all-reduce          2 * bytes * (G-1)/G          (RS + AG phases)
+    all-to-all          bytes * (G-1)/G
+    collective-permute  bytes                        (point-to-point)
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype, 4)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+def _tuple_bytes(tup: str) -> int:
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", tup):
+        total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    out: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        tup, dtype, dims, kind = m.groups()
+        if "-done" in line:
+            continue
+        nbytes = _tuple_bytes(tup) if tup else _shape_bytes(dtype, dims)
+        g = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = len([x for x in gm.group(1).split(",") if x.strip() != ""])
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                g = int(gi.group(2))
+        g = max(g, 1)
+        if kind == "all-gather":
+            wire = nbytes * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = nbytes * (g - 1)
+        elif kind == "all-reduce":
+            wire = 2.0 * nbytes * (g - 1) / g
+        elif kind == "all-to-all":
+            wire = nbytes * (g - 1) / g
+        else:   # collective-permute
+            wire = float(nbytes)
+        rec = out[kind]
+        rec["count"] += 1
+        rec["result_bytes"] += float(nbytes)
+        rec["wire_bytes"] += float(wire)
+    return dict(out)

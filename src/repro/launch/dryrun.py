@@ -1,0 +1,240 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes, and extract the roofline raw material.
+
+MUST be run as a module (``python -m repro.launch.dryrun``) so the two
+lines above execute before ANY other import initializes jax.
+
+Per cell it records:
+- ``compiled.memory_analysis()``  (per-device bytes — proves it fits),
+- ``compiled.cost_analysis()``    (per-device HLO FLOPs / bytes),
+- per-class collective bytes parsed from the compiled HLO text (ring-
+  model per-device wire bytes; see ``collectives.py`` for the formulas),
+- compile wall-time and the collective op census.
+
+Results are cached as JSON under ``benchmarks/results/dryrun/`` keyed by
+(arch, shape, mesh); completed cells are skipped on re-runs so the full
+sweep is resumable (the fleet-scale version of checkpoint/restart).
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, TrainConfig
+from repro.configs.registry import CONFIGS, get_config, supported_shapes
+from repro.distributed import sharding as shd
+from repro.distributed.steps import (build_decode_step, build_prefill_step,
+                                     build_train_step)
+from repro.launch.collectives import parse_collective_bytes
+from repro.launch.hlo_cost import analyze as hlo_analyze
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.optim import adamw
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "results" / "dryrun"
+
+
+def _rules_for(shape_name: str, kind: str):
+    if kind == "train" or kind == "prefill":
+        return shd.TRAIN_RULES
+    if shape_name == "long_500k":
+        return shd.SERVE_LONG_RULES
+    return shd.SERVE_RULES
+
+
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_pspec(specs, rules, cfg, mesh):
+    def spec(path_key, s):
+        if len(s.shape) == 0:
+            return P()
+        if cfg.pos_emb == "mrope" and len(s.shape) == 3 and s.shape[0] == 3:
+            return shd.to_pspec((None, "batch", "seq"), rules,
+                                shape=s.shape, mesh=mesh)
+        parts = ["batch"] + [None] * (len(s.shape) - 1)
+        return shd.to_pspec(tuple(parts), rules, shape=s.shape, mesh=mesh)
+    return {k: spec(k, v) for k, v in specs.items()}
+
+
+def abstract_opt_state(model, params_abs):
+    return jax.eval_shape(
+        lambda p: adamw.init(p, model.cfg.moment_dtype), params_abs)
+
+
+def opt_shardings(mesh, pspecs, moment_dtype: str):
+    """AdamWState shardings mirroring the param pspecs (int8 moments get
+    trimmed scale specs)."""
+    from repro.optim.quantized import QTensor
+
+    def per_param(ps):
+        if moment_dtype == "int8":
+            parts = list(ps)
+            s_spec = P(*(parts[:-1] + [None])) if parts else P()
+            return QTensor(q=NamedSharding(mesh, ps),
+                           s=NamedSharding(mesh, s_spec))
+        return NamedSharding(mesh, ps)
+
+    tree = jax.tree_util.tree_map(per_param, pspecs,
+                                  is_leaf=lambda x: isinstance(x, P))
+    return adamw.AdamWState(step=NamedSharding(mesh, P()),
+                            mu=tree, nu=tree)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               remat: str = None, extra_cfg: dict = None):
+    """Lower + compile one cell; returns the result record."""
+    cfg = get_config(arch)
+    if remat:
+        cfg = cfg.replace(remat=remat)
+    if extra_cfg:
+        cfg = cfg.replace(**extra_cfg)
+    shape = SHAPES[shape_name]
+    model = Model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = shd.filter_rules(_rules_for(shape_name, shape.kind), mesh)
+    params_abs = model.abstract_params()
+    param_sh = _named(mesh, shd.schema_pspecs(model.schema(), rules, mesh))
+    in_specs = model.input_specs(shape)
+    batch_sh = _named(mesh, _batch_pspec(in_specs, rules, cfg, mesh))
+
+    t0 = time.time()
+    with jax.set_mesh(mesh), shd.axis_rules(rules):
+        if shape.kind == "train":
+            tcfg = TrainConfig(microbatches=cfg.train_microbatches)
+            step = build_train_step(model, tcfg)
+            opt_abs = abstract_opt_state(model, params_abs)
+            opt_sh = opt_shardings(
+                mesh, shd.schema_pspecs(model.schema(), rules, mesh),
+                cfg.moment_dtype)
+            lowered = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                donate_argnums=(0, 1),
+            ).lower(params_abs, opt_abs, in_specs)
+        elif shape.kind == "prefill":
+            step = build_prefill_step(model, shape)
+            lowered = jax.jit(
+                step, in_shardings=(param_sh, batch_sh),
+            ).lower(params_abs, in_specs)
+        else:   # decode
+            step = build_decode_step(model)
+            cache_abs, cache_axes = model.cache_specs(shape)
+            cache_sh = _named(mesh, {
+                k: shd.to_pspec(cache_axes[k], rules,
+                                shape=cache_abs[k].shape, mesh=mesh)
+                for k in cache_axes})
+            lowered = jax.jit(
+                step, in_shardings=(param_sh, cache_sh, batch_sh),
+                donate_argnums=(1,),
+            ).lower(params_abs, cache_abs, in_specs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    cost = hlo_analyze(hlo)          # trip-count-aware (scans multiplied)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_device": float(cost["flops"]),
+        "bytes_per_device": float(cost["bytes"]),
+        "collectives": cost["collectives"],
+        "collective_bytes_per_device": float(cost["collective_wire_bytes"]),
+        "raw_cost_analysis": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        },
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_estimate_bytes": int(ma.argument_size_in_bytes +
+                                       ma.output_size_in_bytes +
+                                       ma.temp_size_in_bytes -
+                                       ma.alias_size_in_bytes),
+        },
+        "param_count": model.param_count(),
+    }
+    return rec
+
+
+def run(arch=None, shape=None, meshes=("16x16", "2x16x16"), force=False):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    results = []
+    for a, cfg in CONFIGS.items():
+        if arch and a != arch:
+            continue
+        for s in SHAPES.values():
+            if shape and s.name != shape:
+                continue
+            skip = s.name == "long_500k" and not cfg.supports_long_context
+            for mesh_name in meshes:
+                key = f"{a}__{s.name}__{mesh_name}"
+                out = RESULTS_DIR / f"{key}.json"
+                if out.exists() and not force:
+                    results.append(json.loads(out.read_text()))
+                    print(f"[cached] {key}")
+                    continue
+                if skip:
+                    rec = {"arch": a, "shape": s.name, "mesh": mesh_name,
+                           "skipped": "full-attention arch at 500k ctx "
+                                      "(sub-quadratic required; DESIGN.md)"}
+                    out.write_text(json.dumps(rec, indent=1))
+                    results.append(rec)
+                    print(f"[skip]   {key}")
+                    continue
+                print(f"[run]    {key} ...", flush=True)
+                try:
+                    rec = lower_cell(a, s.name, mesh_name == "2x16x16")
+                    out.write_text(json.dumps(rec, indent=1))
+                    mem = rec["memory"]["peak_estimate_bytes"] / 2**30
+                    print(f"         ok: compile {rec['compile_s']}s, "
+                          f"flops/dev {rec['flops_per_device']:.3e}, "
+                          f"mem/dev {mem:.2f} GiB", flush=True)
+                except Exception as e:
+                    rec = {"arch": a, "shape": s.name, "mesh": mesh_name,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    out.write_text(json.dumps(rec, indent=1))
+                    print(f"         FAILED: {type(e).__name__}: {e}",
+                          flush=True)
+                results.append(rec)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "16x16", "2x16x16"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    meshes = (args.mesh,) if args.mesh else ("16x16", "2x16x16")
+    results = run(args.arch, args.shape, meshes, args.force)
+    n_ok = sum(1 for r in results if "error" not in r and "skipped" not in r)
+    n_err = sum(1 for r in results if "error" in r)
+    n_skip = sum(1 for r in results if "skipped" in r)
+    print(f"\ndry-run: {n_ok} ok, {n_err} failed, {n_skip} skipped")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

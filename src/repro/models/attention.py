@@ -1,0 +1,359 @@
+"""GQA attention: training/prefill (flash-style) + single-token decode.
+
+TP layout strategy (per-dimension divisibility, resolved in
+``distributed.sharding``):
+
+- train/prefill fold GQA to full heads — kv is repeated to H = kv*q_per_kv
+  and the *head* dimension is sharded over the model axis (H divides 16
+  for 8/10 assigned archs; minicpm-2b's 36 and arctic-480b's 56 heads
+  fall back to replicated attention — documented in DESIGN.md). Repeating
+  kv costs bytes but keeps the O(S^2) score chunks sharded 16-way, which
+  is what decides the memory roofline.
+- decode keeps the compact grouped layout (kv cache is NOT repeated) and
+  shards the KV cache on the *sequence* axis (model axis; plus data for
+  long_500k) — distributed FlashDecoding-style split-KV: each shard
+  computes partial softmax stats over its KV slice and GSPMD inserts the
+  combine.
+
+The causal core has a hand-written flash VJP: autodiff through the
+forward scan would stash O(S^2/chunk) probability chunks per layer
+(measured: 90 GiB/device for tinyllama train_4k — §Perf iteration 1).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import Param, apply_mrope, apply_rope
+
+
+def attention_schema(cfg: ModelConfig) -> Dict[str, Param]:
+    d, kv, hd = cfg.d_model, cfg.num_kv_heads, cfg.resolved_head_dim
+    Hp = cfg.resolved_padded_heads
+    s = {
+        "wq": Param((d, Hp, hd), ("embed", "q_heads", "head_dim")),
+        "wk": Param((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": Param((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": Param((Hp, hd, d), ("q_heads", "head_dim", "embed")),
+    }
+    if cfg.use_bias:
+        s["bq"] = Param((Hp, hd), ("q_heads", "head_dim"), init="zeros")
+        s["bk"] = Param((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = Param((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+    return s
+
+
+def _head_mask(cfg: ModelConfig, dtype):
+    """(Hp,) mask zeroing padded q heads (exact semantics, dead weights)."""
+    Hp, H = cfg.resolved_padded_heads, cfg.num_heads
+    if Hp == H:
+        return None
+    return (jnp.arange(Hp) < H).astype(dtype)
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions):
+    """x: (B,S,d) -> q (B,S,H,hd), k,v (B,S,kv,hd) with RoPE applied."""
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.pos_emb == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.pos_emb == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    # NOTE: no explicit constraint on q/k/v — the residual stream is
+    # seq-sharded (act_seq) and forcing a head-shard here makes GSPMD
+    # round-trip full-seq f32 activations through all-gather+all-reduce
+    # (§Perf iteration: -2.1 s collective term on tinyllama train_4k).
+    return q, k, v
+
+
+def _repeat_kv(k, v, cfg: ModelConfig):
+    """(B,S,kv,hd) -> (B,S,Hp,hd), sharded over the head/model axis."""
+    if cfg.q_per_kv > 1:
+        k = jnp.repeat(k, cfg.q_per_kv, axis=2)
+        v = jnp.repeat(v, cfg.q_per_kv, axis=2)
+    Hp, H = cfg.resolved_padded_heads, cfg.num_heads
+    if Hp != H:
+        pad = [(0, 0), (0, 0), (0, Hp - H), (0, 0)]
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    return k, v
+
+
+# ------------------------------------------------------ flash core (XLA)
+
+def _flash_row(q_blk, k_ctx, v_ctx, q_offset: int, kv_chunk: int,
+               scale: float):
+    """One q block against its (statically sliced) causal kv context.
+
+    q_blk: (B, Sq, H, hd); k_ctx/v_ctx: (B, Skv, H, hd), Skv % kv_chunk
+    == 0. Returns (out (B,Sq,H,hd) f32, m (B,H,Sq), l (B,H,Sq))."""
+    B, Sq, H, HD = q_blk.shape
+    Skv = k_ctx.shape[1]
+    n_chunks = Skv // kv_chunk
+    kc = k_ctx.reshape(B, n_chunks, kv_chunk, H, HD).transpose(1, 0, 2, 3, 4)
+    vc = v_ctx.reshape(B, n_chunks, kv_chunk, H, HD).transpose(1, 0, 2, 3, 4)
+    qb = q_blk.astype(jnp.bfloat16)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc, chunk_idx = carry
+        k_c, v_c = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", qb, k_c.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32) * scale
+        k_pos = chunk_idx * kv_chunk + jnp.arange(kv_chunk)
+        mask = q_pos[:, None] >= k_pos[None, :]             # (Sq, chunk)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        corr = jnp.exp(jnp.where(jnp.isfinite(m), m - m_safe, -jnp.inf))
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(jnp.bfloat16),
+                        v_c.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new, chunk_idx + 1), None
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, H, Sq, HD), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, acc0, jnp.int32(0)),
+                                     (kc, vc))
+    l_safe = jnp.maximum(l, 1e-37)
+    out = (acc / l_safe[..., None]).transpose(0, 2, 1, 3)   # (B,Sq,H,hd)
+    return out, m, l_safe
+
+
+def _flash_row_bwd(q_blk, k_ctx, v_ctx, o_blk, do_blk, m, l,
+                   q_offset: int, kv_chunk: int, scale: float):
+    """Hand-written flash backward for one q block row (FA-2 style):
+    recomputes p chunk-by-chunk from the saved (m, l) stats, so nothing
+    O(S^2) is ever materialized. Returns (dq_blk, dk_ctx, dv_ctx)."""
+    B, Sq, H, HD = q_blk.shape
+    Skv = k_ctx.shape[1]
+    n_chunks = Skv // kv_chunk
+    kc = k_ctx.reshape(B, n_chunks, kv_chunk, H, HD).transpose(1, 0, 2, 3, 4)
+    vc = v_ctx.reshape(B, n_chunks, kv_chunk, H, HD).transpose(1, 0, 2, 3, 4)
+    qb = q_blk.astype(jnp.bfloat16)
+    do = do_blk.transpose(0, 2, 1, 3).astype(jnp.float32)   # (B,H,Sq,hd)
+    o = o_blk.transpose(0, 2, 1, 3).astype(jnp.float32)
+    delta = jnp.sum(do * o, axis=-1)                        # (B,H,Sq)
+    q_pos = q_offset + jnp.arange(Sq)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    do_b = do.astype(jnp.bfloat16)
+
+    def body(dq_acc, inp):
+        k_c, v_c, chunk_idx = inp
+        s = jnp.einsum("bqhd,bkhd->bhqk", qb, k_c.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32) * scale
+        k_pos = chunk_idx * kv_chunk + jnp.arange(kv_chunk)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        p = jnp.where(mask[None, None],
+                      jnp.exp(s - m_safe[..., None]) / l[..., None], 0.0)
+        p_b = p.astype(jnp.bfloat16)
+        dv_c = jnp.einsum("bhqk,bhqd->bkhd", p_b, do_b,
+                          preferred_element_type=jnp.float32)
+        dp = jnp.einsum("bhqd,bkhd->bhqk", do_b, v_c.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32)
+        ds = (p * (dp - delta[..., None]) * scale).astype(jnp.bfloat16)
+        dq_acc = dq_acc + jnp.einsum("bhqk,bkhd->bqhd", ds,
+                                     k_c.astype(jnp.bfloat16),
+                                     preferred_element_type=jnp.float32)
+        dk_c = jnp.einsum("bhqk,bqhd->bkhd", ds, qb,
+                          preferred_element_type=jnp.float32)
+        return dq_acc, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, Sq, H, HD), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(
+        body, dq0, (kc, vc, jnp.arange(n_chunks, dtype=jnp.int32)))
+    dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(B, Skv, H, HD)
+    dv = dv_c.transpose(1, 0, 2, 3, 4).reshape(B, Skv, H, HD)
+    return dq, dk, dv
+
+
+def _row_plan(S: int, q_block: int, kv_chunk: int):
+    q_block = min(q_block, S)
+    if S % q_block:
+        q_block = math.gcd(S, q_block) or S
+    rows = []
+    for i in range(S // q_block):
+        ctx = (i + 1) * q_block
+        chunk = min(kv_chunk, ctx)
+        chunk = math.gcd(ctx, chunk) if ctx % chunk else chunk
+        rows.append((i * q_block, ctx, chunk))
+    return q_block, rows
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def causal_flash_xla(q, k, v, q_block: int = 1024, kv_chunk: int = 1024):
+    """Causal flash attention in pure XLA ops (q,k,v: (B,S,H,hd)) with a
+    hand-written flash VJP. Python loop over q blocks with static causal
+    kv slices — HLO compute is block-triangular (only the diagonal block
+    carries masked waste)."""
+    out, _ = _flash_fwd(q, k, v, q_block, kv_chunk)
+    return out
+
+
+def _flash_fwd(q, k, v, q_block: int, kv_chunk: int):
+    B, S, H, HD = q.shape
+    scale = 1.0 / math.sqrt(HD)
+    qb, rows = _row_plan(S, q_block, kv_chunk)
+    outs, ms, ls = [], [], []
+    for (off, ctx, chunk) in rows:
+        with jax.named_scope("qblk"):
+            q_blk = jax.lax.slice_in_dim(q, off, off + qb, axis=1)
+            k_ctx = jax.lax.slice_in_dim(k, 0, ctx, axis=1)
+            v_ctx = jax.lax.slice_in_dim(v, 0, ctx, axis=1)
+            o, m, l = _flash_row(q_blk, k_ctx, v_ctx, off, chunk, scale)
+            outs.append(o.astype(q.dtype))
+            ms.append(m)
+            ls.append(l)
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    m = jnp.stack(ms)                        # (rows, B, H, qb)
+    l = jnp.stack(ls)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_bwd(q_block: int, kv_chunk: int, res, dout):
+    q, k, v, out, m, l = res
+    B, S, H, HD = q.shape
+    scale = 1.0 / math.sqrt(HD)
+    qb, rows = _row_plan(S, q_block, kv_chunk)
+    dq_rows = []
+    # accumulate dk/dv in the INPUT dtype: full-seq f32 accumulators get
+    # resharded by GSPMD at 2x the bytes (§Perf iteration: the f32
+    # all-gather/all-reduce class around attention bwd). Each element
+    # receives at most n_rows (<=32) additions — bf16-safe, verified by
+    # the flash-vjp gradient tests.
+    dk = jnp.zeros((B, S, H, HD), k.dtype)
+    dv = jnp.zeros((B, S, H, HD), v.dtype)
+    for ri, (off, ctx, chunk) in enumerate(rows):
+        with jax.named_scope("qblk_bwd"):
+            q_blk = jax.lax.slice_in_dim(q, off, off + qb, axis=1)
+            k_ctx = jax.lax.slice_in_dim(k, 0, ctx, axis=1)
+            v_ctx = jax.lax.slice_in_dim(v, 0, ctx, axis=1)
+            o_blk = jax.lax.slice_in_dim(out, off, off + qb, axis=1)
+            do_blk = jax.lax.slice_in_dim(dout, off, off + qb, axis=1)
+            dq_r, dk_r, dv_r = _flash_row_bwd(
+                q_blk, k_ctx, v_ctx, o_blk, do_blk, m[ri], l[ri],
+                off, chunk, scale)
+            dq_rows.append(dq_r.astype(q.dtype))
+            pad = [(0, 0), (0, S - ctx), (0, 0), (0, 0)]
+            dk = dk + jnp.pad(dk_r.astype(k.dtype), pad)
+            dv = dv + jnp.pad(dv_r.astype(v.dtype), pad)
+    dq = (jnp.concatenate(dq_rows, axis=1)
+          if len(dq_rows) > 1 else dq_rows[0])
+    return dq, dk, dv
+
+
+causal_flash_xla.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ----------------------------------------------------------- public ops
+
+def attn_train(params, x, positions, cfg: ModelConfig):
+    """Full-sequence causal self-attention (training / prefill forward)."""
+    with jax.named_scope("qkv"):
+        q, k, v = _project_qkv(params, x, cfg, positions)
+        kr, vr = _repeat_kv(k, v, cfg)
+    with jax.named_scope("flash"):
+        if cfg.attn_impl == "pallas":
+            from repro.kernels import ops as kops
+            B, S, H, HD = q.shape
+            o = kops.flash_attention(
+                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3), causal=True).transpose(0, 2, 1, 3)
+        else:
+            o = causal_flash_xla(q, kr, vr, cfg.attn_chunk, cfg.attn_chunk)
+    with jax.named_scope("out_proj"):
+        o = o.astype(x.dtype)
+        hm = _head_mask(cfg, o.dtype)
+        if hm is not None:
+            o = o * hm[None, None, :, None]
+        o = shard(o, "batch", "seq", "q_heads", "head_dim")
+        out = jnp.einsum("bsnh,nhd->bsd", o, params["wo"])
+    return shard(out, "batch", "seq", None)
+
+
+def attn_prefill(params, x, positions, cfg: ModelConfig, cache_len: int):
+    """Like attn_train but also returns the (padded, UNrepeated) KV cache
+    slabs, sequence-sharded for serving."""
+    with jax.named_scope("qkv"):
+        q, k, v = _project_qkv(params, x, cfg, positions)
+        kr, vr = _repeat_kv(k, v, cfg)
+    with jax.named_scope("flash"):
+        o = causal_flash_xla(q, kr, vr, cfg.attn_chunk, cfg.attn_chunk)
+    with jax.named_scope("out_proj"):
+        o = o.astype(x.dtype)
+        hm = _head_mask(cfg, o.dtype)
+        if hm is not None:
+            o = o * hm[None, None, :, None]
+        out = jnp.einsum("bsnh,nhd->bsd", o, params["wo"])
+    S = x.shape[1]
+    pad = [(0, 0), (0, cache_len - S), (0, 0), (0, 0)]
+    kc = shard(jnp.pad(k.astype(cfg.kv_cache_dtype), pad),
+               "batch", "kv_seq", "kv_heads", "head_dim")
+    vc = shard(jnp.pad(v.astype(cfg.kv_cache_dtype), pad),
+               "batch", "kv_seq", "kv_heads", "head_dim")
+    return shard(out, "batch", "seq", None), (kc, vc)
+
+
+def attn_decode(params, x, cache_k, cache_v, pos, cfg: ModelConfig):
+    """Single-token decode against a sequence-sharded KV cache
+    (distributed split-KV softmax; see module docstring).
+
+    x: (B, 1, d); cache_k/v: (B, S_max, kv, hd); pos: scalar int32.
+    Returns (out (B,1,d), new_cache_k, new_cache_v)."""
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    if cfg.pos_emb == "mrope":
+        positions = jnp.broadcast_to(positions, (3,) + positions.shape)
+    with jax.named_scope("qkv"):
+        q, k_new, v_new = _project_qkv(params, x, cfg, positions)
+        B, _, Hp, HD = q.shape
+        H = cfg.num_heads
+        if Hp != H:
+            q = q[:, :, :H]      # decode: drop dead pad heads (tiny tensors)
+        kv = cfg.num_kv_heads
+        qg = q.reshape(B, 1, kv, cfg.q_per_kv, HD)
+    with jax.named_scope("cache_update"):
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k_new.astype(cache_k.dtype), pos, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v_new.astype(cache_v.dtype), pos, axis=1)
+        cache_k = shard(cache_k, "batch", "kv_seq", "kv_heads", "head_dim")
+        cache_v = shard(cache_v, "batch", "kv_seq", "kv_heads", "head_dim")
+    with jax.named_scope("attend"):
+        scale = 1.0 / math.sqrt(HD)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.bfloat16),
+                       cache_k.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32) * scale
+        S_max = cache_k.shape[1]
+        mask = jnp.arange(S_max) <= pos
+        s = jnp.where(mask[None, None, None, None, :], s, -jnp.inf)
+        # max/sum over the (model/data-sharded) kv_seq axis: GSPMD inserts
+        # the FlashDecoding-style partial-softmax combine collectives.
+        m = s.max(axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        l = p.sum(axis=-1, keepdims=True)
+        o = jnp.einsum("bkgqs,bskh->bkgqh", (p / l).astype(jnp.bfloat16),
+                       cache_v.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+    with jax.named_scope("out_proj"):
+        o = o.transpose(0, 3, 1, 2, 4).reshape(B, 1, H, HD).astype(x.dtype)
+        if Hp != H:
+            o = jnp.pad(o, [(0, 0), (0, 0), (0, Hp - H), (0, 0)])
+        out = jnp.einsum("bsnh,nhd->bsd", o, params["wo"])
+    return shard(out, "batch", "seq", None), cache_k, cache_v

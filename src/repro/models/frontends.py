@@ -1,0 +1,42 @@
+"""Modality-frontend STUBS (per the assignment).
+
+``[audio]`` (musicgen) and ``[vlm]`` (qwen2-vl) entries specify the
+transformer BACKBONE only — the EnCodec / vision-patch frontend is a stub
+whose job is to define the *input contract*: ``input_specs()`` provides
+precomputed frame/patch embeddings of shape (B, S, d_model) plus, for
+M-RoPE, the 3-stream position ids.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def frontend_input_specs(cfg: ModelConfig, batch: int, seq: int,
+                         compute_dtype) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for the stubbed frontend outputs."""
+    specs: Dict[str, jax.ShapeDtypeStruct] = {
+        "embeds": jax.ShapeDtypeStruct((batch, seq, cfg.d_model), compute_dtype),
+    }
+    if cfg.pos_emb == "mrope":
+        specs["positions"] = jax.ShapeDtypeStruct((3, batch, seq), jnp.int32)
+    return specs
+
+
+def synth_frontend_batch(cfg: ModelConfig, batch: int, seq: int,
+                         compute_dtype, key) -> Dict[str, jax.Array]:
+    """Concrete synthetic frontend outputs (smoke tests / examples)."""
+    k1, _ = jax.random.split(key)
+    out = {
+        "embeds": (jax.random.normal(k1, (batch, seq, cfg.d_model), jnp.float32)
+                   * 0.02).astype(compute_dtype),
+    }
+    if cfg.pos_emb == "mrope":
+        pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32)[None, None],
+                               (3, batch, seq))
+        out["positions"] = pos
+    return out

@@ -1,0 +1,283 @@
+"""Model facade: schema/init, train loss, prefill, decode, input specs.
+
+Everything is purely functional; parameters are nested dicts whose leaves
+come from the schema machinery in ``layers.py`` (so the same schema
+yields concrete params, abstract ShapeDtypeStructs for the dry-run, and
+logical sharding axes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import shard
+from repro.models import transformer as tfm
+from repro.models import ssm as ssm_mod
+from repro.models.frontends import frontend_input_specs
+from repro.models.layers import (Param, abstract, axes_tree, materialize,
+                                 rmsnorm)
+
+Z_LOSS_WEIGHT = 1e-4
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _grad_dtype_barrier(x, dtype_str: str):
+    """Identity whose BACKWARD casts the cotangent to ``dtype_str``.
+
+    The loss computes f32 logits (stability); without this barrier the
+    f32 cotangent propagates down the ENTIRE residual stream — every
+    boundary collective and stash in the backward pass moves f32 instead
+    of bf16 (§Perf iteration: the all-reduce class halves).
+    """
+    return x
+
+
+def _gdb_fwd(x, dtype_str):
+    return x, None
+
+
+def _gdb_bwd(dtype_str, _, g):
+    return (g.astype(jnp.dtype(dtype_str)),)
+
+
+_grad_dtype_barrier.defvjp(_gdb_fwd, _gdb_bwd)
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------ params
+    def schema(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        s: Dict[str, Any] = {"stack": tfm.stack_schemas(cfg)}
+        V = cfg.padded_vocab_size
+        if cfg.frontend == "none":
+            s["embed"] = Param((V, cfg.d_model), ("vocab", "embed"),
+                               init="embed")
+        if cfg.frontend != "none" or not cfg.tie_embeddings:
+            s["unembed"] = Param((cfg.d_model, V), ("embed", "vocab"))
+        return s
+
+    def init(self, key) -> Dict[str, Any]:
+        return materialize(self.schema(), key, _dtype(self.cfg.param_dtype))
+
+    def abstract_params(self) -> Dict[str, Any]:
+        return abstract(self.schema(), _dtype(self.cfg.param_dtype))
+
+    def logical_axes(self) -> Dict[str, Any]:
+        return axes_tree(self.schema())
+
+    def param_count(self) -> int:
+        import math
+        leaves = jax.tree_util.tree_leaves(self.abstract_params())
+        return sum(math.prod(l.shape) for l in leaves)
+
+    # ------------------------------------------------------------ pieces
+    def _compute_cast(self, params):
+        cd = _dtype(self.cfg.compute_dtype)
+        return jax.tree_util.tree_map(
+            lambda a: a.astype(cd) if a.dtype in (jnp.float32, jnp.bfloat16,
+                                                  jnp.float16) else a, params)
+
+    def _embed_in(self, params, batch):
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        if cfg.frontend == "none":
+            with jax.named_scope("embed"):
+                x = jnp.take(params["embed"], batch["tokens"], axis=0)
+                x = x.astype(cd)
+        else:
+            x = batch["embeds"].astype(cd)
+        return shard(x, "batch", "seq", None)
+
+    def _positions(self, batch, seq: int, batch_size: int):
+        cfg = self.cfg
+        if cfg.pos_emb == "mrope":
+            return batch["positions"]
+        pos = jnp.arange(seq, dtype=jnp.int32)[None]
+        return jnp.broadcast_to(pos, (batch_size, seq))
+
+    def _mask_pad(self, logits):
+        V = self.cfg.padded_vocab_size
+        if V == self.cfg.vocab_size:
+            return logits
+        iota_v = jax.lax.iota(jnp.int32, V)
+        return jnp.where(iota_v[None, :] >= self.cfg.vocab_size,
+                         -jnp.inf, logits)
+
+    def _unembed_weight(self, params):
+        if "unembed" in params:
+            return params["unembed"]                     # (d, V)
+        return params["embed"].T                         # tied
+
+    def _chunked_xent(self, params, x, labels):
+        """Vocab-parallel, seq-chunked cross entropy (+ z-loss).
+
+        Never materializes (B, S, V) logits; the chunk body is remat'd so
+        the backward pass recomputes chunk logits instead of saving them.
+        """
+        cfg = self.cfg
+        B, S, D = x.shape
+        chunk = min(cfg.loss_chunk, S)
+        if S % chunk:
+            chunk = S            # fall back: no chunking on odd lengths
+        nc = S // chunk
+        w = self._unembed_weight(params)
+        xc = x.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+        lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+        V = cfg.padded_vocab_size
+        iota_v = jax.lax.iota(jnp.int32, V)
+        pad_mask = iota_v >= cfg.vocab_size          # -inf'd pad columns
+
+        @jax.checkpoint
+        def body(carry, inp):
+            x_, l_ = inp
+            with jax.named_scope("logits"):
+                logits = jnp.einsum("bsd,dv->bsv", x_, w.astype(x_.dtype),
+                                    preferred_element_type=jnp.float32)
+                logits = jnp.where(pad_mask[None, None, :], -jnp.inf, logits)
+                logits = shard(logits, "batch", "seq", "vocab")
+            with jax.named_scope("xent"):
+                m = jax.lax.stop_gradient(logits.max(axis=-1, keepdims=True))
+                logz = jnp.log(jnp.sum(
+                    jnp.where(pad_mask[None, None, :], 0.0,
+                              jnp.exp(logits - m)), axis=-1)) + m[..., 0]
+                hit = (l_[..., None] == iota_v[None, None, :])
+                ll = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+                nll = jnp.sum(logz - ll)
+                zl = jnp.sum(jnp.square(logz))
+            c_nll, c_zl = carry
+            return (c_nll + nll, c_zl + zl), None
+
+        with jax.named_scope("loss"):
+            (nll, zl), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+                (xc, lc))
+            n_tok = B * S
+            return nll / n_tok, zl / n_tok
+
+    # ------------------------------------------------------------- train
+    def loss_fn(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        params = self._compute_cast(params)
+        x = self._embed_in(params, batch)
+        B, S, _ = x.shape
+        positions = self._positions(batch, S, B)
+        x, aux = tfm.stack_apply(params["stack"], x, positions, cfg)
+        x = _grad_dtype_barrier(x, cfg.compute_dtype)
+        nll, zl = self._chunked_xent(params, x, batch["labels"])
+        loss = nll + Z_LOSS_WEIGHT * zl + aux
+        return loss, {"nll": nll, "z_loss": zl, "aux_loss": aux}
+
+    # ----------------------------------------------------------- serving
+    def prefill(self, params, batch, cache_len: int):
+        cfg = self.cfg
+        params = self._compute_cast(params)
+        x = self._embed_in(params, batch)
+        B, S, _ = x.shape
+        positions = self._positions(batch, S, B)
+        x, cache = tfm.stack_prefill(params["stack"], x, positions, cfg,
+                                     cache_len)
+        with jax.named_scope("last_logits"):
+            last = x[:, -1]
+            logits = jnp.einsum("bd,dv->bv", last,
+                                self._unembed_weight(params).astype(last.dtype),
+                                preferred_element_type=jnp.float32)
+            logits = self._mask_pad(logits)
+        return logits, cache
+
+    def decode_step(self, params, cache, batch):
+        """One token for every sequence. batch: {tokens|embeds, pos}."""
+        cfg = self.cfg
+        params = self._compute_cast(params)
+        cd = _dtype(cfg.compute_dtype)
+        pos = batch["pos"]
+        if cfg.frontend == "none":
+            with jax.named_scope("embed"):
+                x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(cd)
+        else:
+            x = batch["embeds"].astype(cd)
+        x, cache = tfm.stack_decode(params["stack"], cache, x, pos, cfg)
+        with jax.named_scope("last_logits"):
+            logits = jnp.einsum("bd,dv->bv", x[:, -1],
+                                self._unembed_weight(params).astype(cd),
+                                preferred_element_type=jnp.float32)
+            logits = self._mask_pad(logits)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, cache, next_token
+
+    # --------------------------------------------------------- dry specs
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of a cell."""
+        cfg = self.cfg
+        cd = _dtype(cfg.compute_dtype)
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            if cfg.frontend == "none":
+                specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+            else:
+                specs = dict(frontend_input_specs(cfg, B, S, cd))
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            return specs
+        if shape.kind == "prefill":
+            if cfg.frontend == "none":
+                return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+            return dict(frontend_input_specs(cfg, B, S, cd))
+        # decode: one new token against a cache of length S
+        if cfg.frontend == "none":
+            specs = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        else:
+            specs = dict(frontend_input_specs(cfg, B, 1, cd))
+            if cfg.pos_emb == "mrope":
+                # decode positions derive from scalar pos; drop the stream
+                specs.pop("positions")
+        specs["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+        return specs
+
+    def cache_specs(self, shape: ShapeConfig) -> Tuple[Dict[str, Any],
+                                                       Dict[str, Any]]:
+        """(ShapeDtypeStruct tree, logical-axes tree) for the decode cache."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        kvd = _dtype(cfg.kv_cache_dtype)
+        cd = _dtype(cfg.compute_dtype)
+        specs: Dict[str, Any] = {}
+        axes: Dict[str, Any] = {}
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        if cfg.family in ("ssm", "hybrid"):
+            d = ssm_mod.ssm_dims(cfg)
+            L = cfg.num_layers
+            specs["conv"] = jax.ShapeDtypeStruct(
+                (L, B, d["conv_kernel"] - 1, d["conv_dim"]), cd)
+            axes["conv"] = ("layers", "batch", None, "ssm_inner")
+            specs["ssd"] = jax.ShapeDtypeStruct(
+                (L, B, d["heads"], d["head_dim"], d["d_state"]), jnp.float32)
+            axes["ssd"] = ("layers", "batch", "ssm_heads", "ssm_head_dim",
+                           "ssm_state")
+            if cfg.family == "hybrid":
+                n_inv = cfg.num_layers // cfg.shared_attn_every
+                specs["k"] = jax.ShapeDtypeStruct((n_inv, B, S, kv, hd), kvd)
+                specs["v"] = jax.ShapeDtypeStruct((n_inv, B, S, kv, hd), kvd)
+                axes["k"] = axes["v"] = ("layers", "batch", "kv_seq",
+                                         "kv_heads", "head_dim")
+        else:
+            L = cfg.num_layers
+            specs["k"] = jax.ShapeDtypeStruct((L, B, S, kv, hd), kvd)
+            specs["v"] = jax.ShapeDtypeStruct((L, B, S, kv, hd), kvd)
+            axes["k"] = axes["v"] = ("layers", "batch", "kv_seq",
+                                     "kv_heads", "head_dim")
+        return specs, axes
+
+    def init_cache(self, shape: ShapeConfig):
+        specs, _ = self.cache_specs(shape)
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), specs)

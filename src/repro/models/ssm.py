@@ -1,0 +1,238 @@
+"""Mamba-2 (SSD — state-space duality) block. [arXiv:2405.21060]
+
+Chunked SSD algorithm: intra-chunk quadratic ("attention-like") term plus
+an inter-chunk linear state recurrence (lax.scan over chunks). The XLA
+path below is the lowering/dry-run implementation; the Pallas kernel in
+``repro.kernels.ssd_scan`` implements the intra-chunk hot loop with VMEM
+tiling and is validated against ``kernels.ref`` in interpret mode.
+
+Layout:
+    x (b, l, h, p)   h = heads, p = head_dim
+    A (b, l, h)      discretized log-decay (dt * A)
+    B (b, l, g, n)   g = groups (GQA-style shared B/C), n = d_state
+    C (b, l, g, n)
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import Param, rmsnorm
+
+
+def ssm_dims(cfg: ModelConfig) -> Dict[str, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    d_in_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + heads
+    return dict(d_inner=d_inner, heads=heads, conv_dim=conv_dim,
+                d_in_proj=d_in_proj, d_state=s.d_state, groups=s.n_groups,
+                head_dim=s.head_dim, conv_kernel=s.conv_kernel,
+                chunk=s.chunk_size)
+
+
+def ssm_schema(cfg: ModelConfig) -> Dict[str, Param]:
+    d = ssm_dims(cfg)
+    return {
+        "in_proj": Param((cfg.d_model, d["d_in_proj"]), ("embed", "ssm_inner")),
+        "conv_w": Param((d["conv_kernel"], d["conv_dim"]), ("conv", "ssm_inner")),
+        "conv_b": Param((d["conv_dim"],), ("ssm_inner",), init="zeros"),
+        "a_log": Param((d["heads"],), ("ssm_heads",), init="ssm_a"),
+        "d_skip": Param((d["heads"],), ("ssm_heads",), init="ones"),
+        "dt_bias": Param((d["heads"],), ("ssm_heads",), init="ssm_dt"),
+        "norm": Param((d["d_inner"],), ("ssm_inner",), init="zeros"),
+        "out_proj": Param((d["d_inner"], cfg.d_model), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along seq via K static shifts.
+
+    x: (B, S, C); w: (K, C); b: (C,). Cheap (K<=4) and layout-friendly.
+    """
+    K = w.shape[0]
+    out = x * w[-1]
+    for k in range(1, K):
+        shifted = jnp.pad(x, ((0, 0), (k, 0), (0, 0)))[:, :-k]
+        out = out + shifted * w[-1 - k]
+    return out + b
+
+
+def _segsum_exp(a_cs):
+    """a_cs: (..., q) inclusive cumsum -> exp lower-tri decay (..., q, q)."""
+    q = a_cs.shape[-1]
+    seg = a_cs[..., :, None] - a_cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, jnp.exp(seg), 0.0)
+
+
+def ssd_chunked_xla(x, a, b, c, chunk: int, h_per_g: int,
+                    initial_state=None, return_final_state: bool = False):
+    """Chunked SSD scan (pure XLA).
+
+    x: (B, L, h, p) — already discretized (x * dt)
+    a: (B, L, h)    — discretized log decay (A * dt), <= 0
+    b, c: (B, L, g, n) with h = g * h_per_g
+    Returns y (B, L, h, p) [, final_state (B, g, e, p, n)].
+    """
+    B, L, H, Pd = x.shape
+    G, N = b.shape[2], b.shape[3]
+    E = h_per_g
+    if L % chunk:
+        raise ValueError(f"L {L} % chunk {chunk}")
+    C_ = L // chunk
+    xe = x.reshape(B, C_, chunk, G, E, Pd)
+    ae = a.reshape(B, C_, chunk, G, E).transpose(0, 3, 4, 1, 2)  # (B,G,E,C,Q)
+    be = b.reshape(B, C_, chunk, G, N)
+    ce = c.reshape(B, C_, chunk, G, N)
+
+    ae32 = ae.astype(jnp.float32)
+    a_cs = jnp.cumsum(ae32, axis=-1)                             # (B,G,E,C,Q)
+
+    with jax.named_scope("intra"):
+        cb = jnp.einsum("bcqgn,bckgn->bcgqk", ce, be,
+                        preferred_element_type=jnp.float32)
+        decay = _segsum_exp(a_cs)                                # (B,G,E,C,Q,Q)
+        decay = shard(decay, "batch", None, "ssm_heads", None, None, None)
+        cbl = cb[:, :, :, None] * decay.transpose(0, 3, 1, 2, 4, 5)
+        cbl = shard(cbl, "batch", None, None, "ssm_heads", None, None)
+        y_diag = jnp.einsum("bcgeqk,bckgep->bcqgep",
+                            cbl.astype(x.dtype), xe)
+
+    with jax.named_scope("chunk_states"):
+        decay_states = jnp.exp(a_cs[..., -1:] - a_cs)            # (B,G,E,C,Q)
+        states = jnp.einsum("bckgn,bgeck,bckgep->bcgepn",
+                            be, decay_states.astype(x.dtype), xe)
+        states = shard(states, "batch", None, None, "ssm_heads", None, None)
+
+    with jax.named_scope("state_pass"):
+        chunk_decay = jnp.exp(a_cs[..., -1])                     # (B,G,E,C)
+
+        def body(carry, inp):
+            st, dec = inp                                        # (B,G,E,P,N)
+            new = carry * dec[..., None, None].astype(carry.dtype) + st
+            return new, carry
+
+        init = (jnp.zeros((B, G, E, Pd, N), jnp.float32)
+                if initial_state is None else initial_state.astype(jnp.float32))
+        final, prev_states = jax.lax.scan(
+            body, init,
+            (states.astype(jnp.float32).transpose(1, 0, 2, 3, 4, 5),
+             chunk_decay.transpose(3, 0, 1, 2)))
+        prev_states = prev_states.transpose(1, 0, 2, 3, 4, 5)    # (B,C,G,E,P,N)
+
+    with jax.named_scope("inter"):
+        state_decay_out = jnp.exp(a_cs)                          # (B,G,E,C,Q)
+        y_off = jnp.einsum("bcqgn,bcgepn,bgecq->bcqgep",
+                           ce, prev_states.astype(x.dtype),
+                           state_decay_out.astype(x.dtype))
+
+    y = (y_diag + y_off).reshape(B, L, H, Pd)
+    if return_final_state:
+        return y, final
+    return y
+
+
+def ssm_apply(params, x, cfg: ModelConfig, *, use_kernel: bool = False,
+              return_state: bool = False):
+    """Full-sequence Mamba2 block forward. x: (B, S, d_model).
+
+    With ``return_state`` also returns (conv_state (B,K-1,conv_dim),
+    ssd_state (B,h,p,n)) — the decode caches after consuming the prefix.
+    """
+    d = ssm_dims(cfg)
+    B, S, _ = x.shape
+    with jax.named_scope("in_proj"):
+        zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+        zxbcdt = shard(zxbcdt, "batch", "seq", "ssm_inner")
+    di, g, n, h = d["d_inner"], d["groups"], d["d_state"], d["heads"]
+    z, xbc_raw, dt = jnp.split(zxbcdt, [di, di + d["conv_dim"]], axis=-1)
+    with jax.named_scope("conv"):
+        xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+        xbc = jax.nn.silu(xbc)
+    xs, b, c = jnp.split(xbc, [di, di + g * n], axis=-1)
+    xs = xs.reshape(B, S, h, d["head_dim"])
+    b = b.reshape(B, S, g, n)
+    c = c.reshape(B, S, g, n)
+    with jax.named_scope("discretize"):
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+        a = -jnp.exp(params["a_log"].astype(jnp.float32))        # (h,)
+        a_disc = (dt * a).astype(jnp.float32)                    # (B,S,h)
+        x_disc = xs * dt[..., None].astype(xs.dtype)
+    with jax.named_scope("ssd"):
+        chunk = min(d["chunk"], S)
+        pad = (-S) % chunk
+        if pad:
+            # zero-pad: a=0 (decay 1) with x=0 leaves state/output intact
+            x_disc = jnp.pad(x_disc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            a_disc = jnp.pad(a_disc, ((0, 0), (0, pad), (0, 0)))
+            b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if use_kernel:
+            from repro.kernels import ops as kops
+            y = kops.ssd_scan(x_disc, a_disc, b, c, chunk=chunk,
+                              h_per_g=h // g)
+            final_state = None
+        else:
+            y, final_state = ssd_chunked_xla(
+                x_disc, a_disc, b, c, chunk=chunk, h_per_g=h // g,
+                return_final_state=True)
+        if pad:
+            y = y[:, :S]
+    with jax.named_scope("out"):
+        y = y + params["d_skip"][:, None].astype(xs.dtype) * xs
+        y = y.reshape(B, S, di)
+        y = rmsnorm(y, params["norm"], cfg.norm_eps) * jax.nn.silu(z)
+        out = jnp.einsum("be,ed->bd", y.reshape(B * S, di),
+                         params["out_proj"]).reshape(B, S, -1)
+    out = shard(out, "batch", "seq", None)
+    if return_state:
+        K = d["conv_kernel"]
+        conv_state = xbc_raw[:, S - (K - 1):, :]                 # (B,K-1,C)
+        e = h // g
+        ssd_state = final_state.reshape(B, h, d["head_dim"], n)  # (B,h,p,n)
+        return out, conv_state, ssd_state
+    return out
+
+
+def ssm_decode(params, x, conv_state, ssd_state, cfg: ModelConfig):
+    """Single-token decode. x: (B,1,d); conv_state: (B,K-1,conv_dim);
+    ssd_state: (B,h,p,n). Returns (out, new_conv_state, new_ssd_state)."""
+    d = ssm_dims(cfg)
+    B = x.shape[0]
+    di, g, n, h, p = (d["d_inner"], d["groups"], d["d_state"], d["heads"],
+                      d["head_dim"])
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])[:, 0]
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + d["conv_dim"]], axis=-1)
+    with jax.named_scope("conv_step"):
+        w = params["conv_w"]                                     # (K, C)
+        hist = jnp.concatenate([conv_state, xbc[:, None]], axis=1)  # (B,K,C)
+        y_conv = jnp.einsum("bkc,kc->bc", hist, w) + params["conv_b"]
+        new_conv_state = hist[:, 1:]
+        xbc = jax.nn.silu(y_conv)
+    xs, b, c = jnp.split(xbc, [di, di + g * n], axis=-1)
+    xs = xs.reshape(B, h, p)
+    b = b.reshape(B, g, n)
+    c = c.reshape(B, g, n)
+    with jax.named_scope("state_update"):
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,h)
+        a = -jnp.exp(params["a_log"].astype(jnp.float32))
+        da = jnp.exp(dt * a)                                     # (B,h)
+        e = h // g
+        bx = jnp.einsum("bgn,bhp->bhpn",
+                        b.astype(jnp.float32),
+                        xs.astype(jnp.float32) * dt[..., None])
+        new_state = ssd_state * da[..., None, None] + bx         # (B,h,p,n)
+        ce = jnp.repeat(c, e, axis=1)                            # (B,h,n)
+        y = jnp.einsum("bhpn,bhn->bhp", new_state, ce.astype(jnp.float32))
+        y = y.astype(xs.dtype) + params["d_skip"][:, None].astype(xs.dtype) * xs
+    with jax.named_scope("out"):
+        y = y.reshape(B, di)
+        y = rmsnorm(y, params["norm"], cfg.norm_eps) * jax.nn.silu(z)
+        out = jnp.einsum("be,ed->bd", y, params["out_proj"])[:, None]
+    return out, new_conv_state, new_state

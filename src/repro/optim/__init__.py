@@ -1,0 +1,5 @@
+from repro.optim import adamw, compression, schedule
+from repro.optim.adamw import AdamWState, clip_by_global_norm, global_norm
+
+__all__ = ["adamw", "compression", "schedule", "AdamWState",
+           "clip_by_global_norm", "global_norm"]

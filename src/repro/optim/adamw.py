@@ -1,0 +1,111 @@
+"""AdamW with dtype policies + global-norm clipping.
+
+Moments can be stored in bf16 (``ModelConfig.moment_dtype``) — required
+for arctic-480b to fit 16 GB/chip HBM (math is always f32; storage
+rounds). Master params follow ``param_dtype``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray              # int32 scalar
+    mu: Any                        # pytree like params (arrays or QTensor)
+    nu: Any
+
+
+def init(params, moment_dtype: str = "float32") -> AdamWState:
+    if moment_dtype == "int8":
+        from repro.optim.quantized import zeros_like_q
+        zeros = zeros_like_q
+    else:
+        md = jnp.dtype(moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, md)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree_util.tree_map(zeros, params),
+                      nu=jax.tree_util.tree_map(zeros, params))
+
+
+def _load_moment(m):
+    from repro.optim.quantized import QTensor, dequantize
+    if isinstance(m, QTensor):
+        return dequantize(m)
+    return m.astype(jnp.float32)
+
+
+def _store_moment(m32, like):
+    from repro.optim.quantized import QTensor, quantize
+    if isinstance(like, QTensor):
+        return quantize(m32)
+    return m32.astype(like.dtype)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def update(params, grads, state: AdamWState, cfg: TrainConfig,
+           schedule: Callable) -> Tuple[Any, AdamWState, Dict[str, Any]]:
+    with jax.named_scope("clip"):
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = schedule(step)
+    b1, b2, eps, wd = cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * _load_moment(m) + (1 - b1) * g32
+        v32 = b2 * _load_moment(v) + (1 - b2) * jnp.square(g32)
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p32)
+        return (p_new.astype(p.dtype), _store_moment(m32, m),
+                _store_moment(v32, v))
+
+    # Big (layer-stacked) leaves are updated under a lax.scan over the
+    # leading dim: the optimizer is bandwidth-bound and elementwise, and
+    # bounding its f32 working set to one layer slice per leaf keeps peak
+    # HBM flat (measured 27 GiB of concurrent f32 update temporaries on
+    # arctic-480b without this).
+    SCAN_THRESHOLD_BYTES = 128 * 2**20
+
+    def upd_maybe_scanned(p, g, m, v):
+        if p.ndim >= 2 and p.nbytes > SCAN_THRESHOLD_BYTES:
+            def body(_, xs):
+                return None, upd(*xs)
+            _, (pn, mn, vn) = jax.lax.scan(body, None, (p, g, m, v))
+            return pn, mn, vn
+        return upd(p, g, m, v)
+
+    from repro.optim.quantized import QTensor
+    is_leaf = lambda x: isinstance(x, QTensor)
+    with jax.named_scope("adamw"):
+        flat_p, tdef = jax.tree_util.tree_flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = jax.tree_util.tree_leaves(state.mu, is_leaf=is_leaf)
+        flat_v = jax.tree_util.tree_leaves(state.nu, is_leaf=is_leaf)
+        out = [upd_maybe_scanned(p, g, m, v) for p, g, m, v in
+               zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v), {
+        "lr": lr, "grad_norm": gnorm}

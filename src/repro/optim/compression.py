@@ -1,0 +1,47 @@
+"""int8 error-feedback gradient compression for the cross-pod all-reduce.
+
+At 512+ chips the pod-to-pod (DCI) hop is the thinnest link in the
+gradient all-reduce. This implements 1-bit-Adam-style error feedback
+[arXiv:2102.02888-adjacent]: quantize (grad + residual) to int8 with a
+per-tensor scale before the cross-pod reduce, keep the quantization error
+as residual state for the next step. Convergence-safe (error feedback is
+unbiased over time), 4x less DCI traffic than f32 / 2x less than bf16.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_residual(params) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads, residual) -> Tuple[Any, Any, Any]:
+    """Returns (int8 payload, scales, new_residual_partial). The residual
+    update completes in ``decompress_combine`` once the payload is known
+    (compression error = pre-quant value - dequantized value)."""
+
+    def q(g, r):
+        g32 = g.astype(jnp.float32) + r
+        scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+        q8 = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+        new_r = g32 - q8.astype(jnp.float32) * scale
+        return q8, scale, new_r
+
+    flat, tdef = jax.tree_util.tree_flatten(grads)
+    rflat = tdef.flatten_up_to(residual)
+    out = [q(g, r) for g, r in zip(flat, rflat)]
+    payload = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    scales = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_res = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return payload, scales, new_res
+
+
+def decompress(payload, scales, dtype=jnp.float32) -> Any:
+    return jax.tree_util.tree_map(
+        lambda q, s: (q.astype(jnp.float32) * s).astype(dtype),
+        payload, scales)

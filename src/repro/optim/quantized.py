@@ -1,0 +1,42 @@
+"""Row-wise int8 quantized optimizer state (bitsandbytes-flavored).
+
+For arctic-480b on a 16 GB/chip v5e pod, fp32 (even bf16) AdamW moments
+do not fit: params 0.96 TB + bf16 moments 1.92 TB + grads vs 4 TB
+aggregate HBM. 8-bit moments with per-row f32 scales cut the moment
+bytes ~2x vs bf16 with negligible quality impact [arXiv:2110.02861].
+
+Quantization is one reduce + elementwise ops along the last dim — no
+padding or reshapes — so GSPMD sharding propagates through it untouched
+(a blockwise variant with pad-to-256 reshapes was measured to force
+replication of every optimizer tensor on the 16x16 mesh).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QTensor(NamedTuple):
+    q: jnp.ndarray        # int8, shape = orig shape
+    s: jnp.ndarray        # f32 scales, shape = (*orig[:-1], 1)
+
+
+def quantize(x) -> QTensor:
+    """x -> rowwise int8 along the last dim."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x32), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q=q, s=scale)
+
+
+def dequantize(qt: QTensor) -> jnp.ndarray:
+    return qt.q.astype(jnp.float32) * qt.s
+
+
+def zeros_like_q(p) -> QTensor:
+    sshape = (p.shape[:-1] + (1,)) if p.ndim else (1,)
+    return QTensor(q=jnp.zeros(p.shape, jnp.int8),
+                   s=jnp.zeros(sshape, jnp.float32))

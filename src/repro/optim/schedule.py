@@ -1,0 +1,35 @@
+"""LR schedules: WSD (MiniCPM's warmup-stable-decay) and cosine."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def wsd(step, cfg: TrainConfig, peak_lr: float):
+    """Warmup-Stable-Decay [arXiv:2404.06395]: linear warmup, long stable
+    plateau, then exponential-style decay to 10% of peak."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.float32(cfg.warmup_steps)
+    total = jnp.float32(cfg.total_steps)
+    stable_end = warm + (total - warm) * cfg.stable_ratio
+    warmup_lr = peak_lr * step / jnp.maximum(warm, 1.0)
+    decay_frac = (step - stable_end) / jnp.maximum(total - stable_end, 1.0)
+    decay_lr = peak_lr * jnp.power(0.1, jnp.clip(decay_frac, 0.0, 1.0))
+    return jnp.where(step < warm, warmup_lr,
+                     jnp.where(step < stable_end, peak_lr, decay_lr))
+
+
+def cosine(step, cfg: TrainConfig, peak_lr: float):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.float32(cfg.warmup_steps)
+    total = jnp.float32(cfg.total_steps)
+    warmup_lr = peak_lr * step / jnp.maximum(warm, 1.0)
+    frac = jnp.clip((step - warm) / jnp.maximum(total - warm, 1.0), 0.0, 1.0)
+    cos_lr = 0.1 * peak_lr + 0.9 * peak_lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warm, warmup_lr, cos_lr)
+
+
+def make_schedule(name: str, cfg: TrainConfig):
+    fn = {"wsd": wsd, "cosine": cosine}[name]
+    return lambda step: fn(step, cfg, cfg.learning_rate)

@@ -1,0 +1,26 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests see the real (1-device) backend.
+# Multi-device tests spawn subprocesses that set their own flags
+# (tests/test_distributed.py), and the 512-device dry-run only ever runs
+# via `python -m repro.launch.dryrun`.
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_batch(cfg, B=2, S=64, seed=0):
+    k = jax.random.PRNGKey(seed)
+    from repro.models.frontends import synth_frontend_batch
+    if cfg.frontend != "none":
+        batch = dict(synth_frontend_batch(cfg, B, S, jnp.bfloat16, k))
+    else:
+        batch = {"tokens": jax.random.randint(k, (B, S), 0, cfg.vocab_size)}
+    batch["labels"] = jax.random.randint(jax.random.fold_in(k, 1), (B, S),
+                                         0, cfg.vocab_size)
+    return batch

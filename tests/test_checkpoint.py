@@ -1,0 +1,107 @@
+"""Fault-tolerance: atomic/async/sharded checkpointing + elastic restore
++ exactly-once data accounting."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.data import DataConfig, PipelineState, TokenPipeline
+
+
+def _tree(key, scale=1.0):
+    return {"a": jnp.full((4, 8), scale), "b": {"c": jnp.arange(6.0) * scale}}
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    tree = _tree(None, 3.0)
+    ck.save(7, tree, extra={"step": 7})
+    assert ck.latest() == 7
+    restored, extra = ck.restore(7, tree)
+    assert extra["step"] == 7
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_and_retention(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2, async_save=True)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(None, float(s)))
+    ck.wait()
+    assert ck.all_steps() == [3, 4]
+
+
+def test_atomicity_tmp_ignored(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(1, _tree(None))
+    # a crashed half-written checkpoint must be invisible
+    os.makedirs(tmp_path / "step_00000009.tmp")
+    assert ck.latest() == 1
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Restore onto a different sharding (elastic restart)."""
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    tree = _tree(None, 2.0)
+    ck.save(5, tree)
+    shardings = jax.tree_util.tree_map(
+        lambda _: jax.sharding.SingleDeviceSharding(jax.devices()[0]), tree)
+    restored, _ = ck.restore(5, tree, shardings=shardings)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_restart_resumes_training(tmp_path):
+    from repro.launch.train import train
+    d = str(tmp_path / "ck")
+    _, _, hist1 = train("tinyllama-1.1b", steps=6, batch=2, seq=32,
+                        checkpoint_dir=d, log_every=100)
+    # restart from the saved checkpoint and continue deterministically
+    from repro.checkpoint import Checkpointer
+    assert Checkpointer(d).latest() == 6
+
+
+# ------------------------------------------------------ data pipeline
+
+def test_pipeline_deterministic():
+    cfg = DataConfig(vocab_size=1000, seq_len=16, global_batch=4, seed=3)
+    p1, p2 = TokenPipeline(cfg), TokenPipeline(cfg)
+    b1, b2 = p1.batch_at(11), p2.batch_at(11)
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert np.array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_pipeline_host_sharding_partitions_global_batch():
+    cfg = DataConfig(vocab_size=1000, seq_len=8, global_batch=8, seed=0)
+    full = TokenPipeline(cfg).batch_at(5)["tokens"]
+    parts = []
+    for h in range(4):
+        c = DataConfig(vocab_size=1000, seq_len=8, global_batch=8, seed=0,
+                       num_hosts=4, host_index=h)
+        parts.append(TokenPipeline(c).batch_at(5)["tokens"])
+    assert np.array_equal(np.concatenate(parts), full)
+
+
+def test_pipeline_elastic_reshard_no_dup_no_skip():
+    cfg = DataConfig(vocab_size=500, seq_len=8, global_batch=6, seed=1,
+                     num_hosts=2, host_index=0)
+    p = TokenPipeline(cfg)
+    next(p)                                  # consume step 0
+    # node loss: restart on 3 hosts from the same global step
+    p2 = p.reshard(num_hosts=3, host_index=1)
+    assert p2.state.step == 1
+    b = p2.batch_at(1)
+    # host 1 of 3 sees samples [2,3] of the global step-1 batch
+    ref = TokenPipeline(DataConfig(vocab_size=500, seq_len=8,
+                                   global_batch=6, seed=1)).batch_at(1)
+    assert np.array_equal(b["tokens"], ref["tokens"][2:4])
+
+
+def test_pipeline_state_roundtrip():
+    st = PipelineState(step=42)
+    assert PipelineState.from_dict(st.to_dict()).step == 42

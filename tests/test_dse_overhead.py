@@ -1,0 +1,91 @@
+"""Paper §IV-D/E substrate: analytical overhead model, adaptive
+allocation, DSE Pareto sweep, incremental re-instrumentation."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (OverheadModel, ProbeConfig, adapt_allocation,
+                        measure_incremental, measure_overhead, probe,
+                        run_dse)
+from repro.core.buffer import state_bytes
+
+
+def _fn(x, w):
+    def body(c, _):
+        with jax.named_scope("layer"):
+            with jax.named_scope("attn"):
+                c = jnp.tanh(c @ w) @ w.T + c
+            with jax.named_scope("mlp"):
+                c = jax.nn.silu(c @ w) @ w.T + c
+        return c, None
+    with jax.named_scope("layers"):
+        x, _ = jax.lax.scan(body, x, None, length=6)
+    with jax.named_scope("head"):
+        return jnp.sum(x * x)
+
+
+X = jnp.ones((8, 32)) * 0.1
+W = jnp.full((32, 32), 0.05)
+
+
+def test_overhead_model_fits_measurements():
+    samples = []
+    for tgt, depth in [(("",), 4), (("layers",), 8),
+                       (("layers/scan#0/layer",), 4), (("head",), 4)]:
+        samples.append(measure_overhead(
+            _fn, (X, W), ProbeConfig(targets=tgt, buffer_depth=depth,
+                                     inline="off_all")))
+    m = OverheadModel.fit(samples)
+    for s in samples:
+        pred = m.predict_eqns(s)
+        assert abs(pred - s["extra_eqns"]) / max(s["extra_eqns"], 1) < 0.25
+        assert m.predict_state_bytes(s["n_probes"], s["depth"]) == \
+            s["state_bytes"]
+
+
+def test_overhead_scales_with_probes():
+    few = measure_overhead(_fn, (X, W),
+                           ProbeConfig(targets=("head",), inline="off_all"))
+    many = measure_overhead(_fn, (X, W),
+                            ProbeConfig(targets=("",), inline="off_all"))
+    assert many["n_probes"] > few["n_probes"]
+    assert many["extra_eqns"] > few["extra_eqns"]
+
+
+def test_adapt_allocation_fits_budget():
+    n, d = adapt_allocation(50, 64, budget_bytes=state_bytes(50, 8))
+    assert state_bytes(n, d) <= state_bytes(50, 8)
+    assert n == 50 and d <= 8            # prefers shrinking depth
+    n2, d2 = adapt_allocation(50, 4, budget_bytes=state_bytes(10, 1))
+    assert state_bytes(n2, d2) <= state_bytes(10, 1)
+    assert n2 < 50                       # then drops probes
+
+
+def test_dse_sweep_and_pareto():
+    res = run_dse(_fn, (X, W), ProbeConfig(inline="off_all"),
+                  storages=("registers", "bram"),
+                  offload_ratios=(0.0, 0.5), repeats=1)
+    assert len(res.points) == 4
+    assert 1 <= len(res.pareto) <= 4
+    assert res.best() is not None
+    # offloading points actually shipped bytes to the "DRAM" sink
+    off = [p for p in res.points if p.offload_ratio > 0]
+    assert any(p.dram_bytes > 0 for p in off)
+    # deeper buffers cost more state
+    reg = next(p for p in res.points
+               if p.storage == "registers" and p.offload_ratio == 0)
+    bram = next(p for p in res.points
+                if p.storage == "bram" and p.offload_ratio == 0)
+    assert bram.state_bytes > reg.state_bytes
+    assert res.table()                  # renders
+
+
+def test_incremental_reuse():
+    t = measure_incremental(
+        _fn, (X, W),
+        ProbeConfig(targets=("layers",), inline="off_all"),
+        ProbeConfig(targets=("layers/scan#0/layer/mlp",), inline="off_all"))
+    assert t.base_compile_reused         # model executable untouched
+    assert t.retarget_total_s < t.cold_total_s
+    assert t.reuse_fraction > 0
+    assert t.table()

@@ -1,0 +1,96 @@
+"""Hierarchy extraction (C-to-RTL mapping analogue) + inline policies."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import extract, probe, ProbeConfig
+from repro.core.hierarchy import normalize_stack
+from repro.core.inline import selectable_paths
+
+
+def _fn(x, w):
+    with jax.named_scope("embed"):
+        x = x + 1.0
+    def body(c, _):
+        with jax.named_scope("layer"):
+            with jax.named_scope("attn"):
+                c = jnp.tanh(c @ w)
+            with jax.named_scope("mlp"):
+                c = c @ w.T + c
+        return c, None
+    with jax.named_scope("layers"):
+        x, _ = jax.lax.scan(body, x, None, length=7)
+    return x.sum()
+
+
+def test_normalize_stack():
+    assert normalize_stack("a/b") == ("a", "b")
+    assert normalize_stack("jvp(a)/b") == ("a", "b")
+    assert normalize_stack("transpose(jvp(a))/b") == ("a~bwd", "b")
+    assert normalize_stack("jvp()") == ()
+    assert normalize_stack("") == ()
+
+
+def test_extract_tree_structure():
+    jaxpr = jax.make_jaxpr(_fn)(jnp.ones((4, 8)), jnp.ones((8, 8)))
+    h = extract(jaxpr)
+    paths = set(h.all_paths())
+    assert {"embed", "layers", "layers/scan#0", "layers/scan#0/layer",
+            "layers/scan#0/layer/attn",
+            "layers/scan#0/layer/mlp"} <= paths
+    loop = h.node("layers/scan#0")
+    assert loop.kind == "loop" and loop.trip_count == 7
+    # static totals: parent >= sum of direct children per visit
+    layer = h.node("layers/scan#0/layer")
+    attn = h.node("layers/scan#0/layer/attn")
+    mlp = h.node("layers/scan#0/layer/mlp")
+    assert layer.static_cycles >= attn.static_cycles + mlp.static_cycles
+
+
+def test_source_mapping_present():
+    jaxpr = jax.make_jaxpr(_fn)(jnp.ones((4, 8)), jnp.ones((8, 8)))
+    h = extract(jaxpr)
+    table = {r["path"]: r for r in h.mapping_table()}
+    assert table["layers/scan#0/layer/attn"]["source"].startswith(
+        "test_hierarchy.py")
+
+
+def test_grad_scopes_marked_bwd():
+    f = lambda x, w: _fn(x, w)
+    jaxpr = jax.make_jaxpr(jax.grad(f))(jnp.ones((4, 8)), jnp.ones((8, 8)))
+    h = extract(jaxpr)
+    paths = h.all_paths()
+    assert any(p.startswith("layers~bwd") for p in paths)
+    assert any(p.startswith("layers/") for p in paths)
+
+
+def test_inline_policies():
+    jaxpr = jax.make_jaxpr(_fn)(jnp.ones((4, 8)), jnp.ones((8, 8)))
+    h = extract(jaxpr)
+    off_all = set(selectable_paths(h, "off_all", ("",)))
+    default = set(selectable_paths(h, "default", ("",)))
+    off_top = set(selectable_paths(
+        h, "off_top", ("layers/scan#0/layer",)))
+    assert default <= off_all
+    # 'embed' is a 1-eqn scope: inlined by default, kept by off_all
+    assert "embed" in off_all and "embed" not in default
+    # off_top keeps full detail under the target
+    assert "layers/scan#0/layer/attn" in off_top
+
+
+def test_max_probes_cap():
+    def fn(x):
+        for i in range(10):
+            with jax.named_scope(f"s{i}"):
+                x = jnp.tanh(x) * 1.1 + x
+        return x.sum()
+    pf = probe(fn, ProbeConfig(inline="off_all", max_probes=5))
+    pf(jnp.ones((4, 4)))
+    assert len(pf.probe_paths()) == 5           # paper's 50-module cap
+
+
+def test_depth_limit():
+    jaxpr_fn = _fn
+    pf = probe(jaxpr_fn, ProbeConfig(inline="off_all", depth_limit=1))
+    pf(jnp.ones((4, 8)), jnp.ones((8, 8)))
+    assert all(p.count("/") <= 1 for p in pf.probe_paths())

@@ -1,0 +1,101 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.counters import (c64, c64_add, c64_add_int, c64_sub,
+                                 c64_to_int)
+from repro.core.buffer import state_bytes
+from repro.data import DataConfig, TokenPipeline
+from repro.optim.quantized import dequantize, quantize
+
+U64 = 1 << 64
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, U64 - 1), st.integers(0, U64 - 1))
+def test_c64_add_matches_python(a, b):
+    got = int(c64_to_int(c64_add(c64(a), c64(b))))
+    assert got == (a + b) % U64
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, U64 - 1), st.integers(0, U64 - 1))
+def test_c64_sub_matches_python(a, b):
+    got = int(c64_to_int(c64_sub(c64(a), c64(b))))
+    assert got == (a - b) % U64
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, U64 - 1), st.integers(0, 1 << 40))
+def test_c64_add_int_matches_python(a, d):
+    got = int(c64_to_int(c64_add_int(c64(a), d)))
+    assert got == (a + d) % U64
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 64))
+def test_state_bytes_monotone(n, d):
+    assert state_bytes(n + 1, d) > state_bytes(n, d)
+    assert state_bytes(n, d + 1) > state_bytes(n, d)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 8), st.integers(2, 500))
+def test_pipeline_sample_pure_function_of_index(step, hosts, vocab):
+    """host shards partition the global stream for any host count."""
+    gb = hosts * 2
+    full = TokenPipeline(DataConfig(vocab_size=vocab, seq_len=4,
+                                    global_batch=gb, seed=9)).batch_at(step)
+    parts = [TokenPipeline(DataConfig(vocab_size=vocab, seq_len=4,
+                                      global_batch=gb, seed=9,
+                                      num_hosts=hosts, host_index=h)
+                           ).batch_at(step)["tokens"]
+             for h in range(hosts)]
+    assert np.array_equal(np.concatenate(parts), full["tokens"])
+    assert full["tokens"].max() < vocab
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 200), st.floats(0.1, 100.0))
+def test_quantize_error_bounded(rows, cols, scale):
+    key = jax.random.PRNGKey(rows * cols)
+    x = jax.random.normal(key, (rows, cols)) * scale
+    err = np.asarray(jnp.abs(dequantize(quantize(x)) - x))
+    rowmax = np.asarray(jnp.max(jnp.abs(x), axis=-1, keepdims=True))
+    assert (err <= rowmax * (0.5 / 127) + 1e-6).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 5), st.integers(1, 4))
+def test_probe_report_invariants(n_layers, width_pow, seed):
+    """start <= end; child total <= ancestor total; span >= any total."""
+    from repro.core import probe, ProbeConfig
+    from repro.core.report import build_report
+    d = 2 ** width_pow
+
+    def fn(x, w):
+        def body(c, _):
+            with jax.named_scope("layer"):
+                with jax.named_scope("mm"):
+                    c = jnp.tanh(c @ w) + c
+            return c, None
+        with jax.named_scope("layers"):
+            x, _ = jax.lax.scan(body, x, None, length=n_layers)
+        return x.sum()
+
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, d))
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (d, d)) * 0.1
+    pf = probe(fn, ProbeConfig(inline="off_all"))
+    _, rec = pf(x, w)
+    rep = pf.report(rec)
+    by_path = {r.path: r for r in rep.rows}
+    for r in rep.rows:
+        assert r.end >= r.start
+        assert rep.span >= r.total_cycles
+        parent = r.path.rsplit("/", 1)[0] if "/" in r.path else None
+        if parent and parent in by_path:
+            assert by_path[parent].total_cycles >= r.total_cycles
+    lay = by_path.get("layers/scan#0/layer")
+    assert lay is not None and lay.calls == n_layers
