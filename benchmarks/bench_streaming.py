@@ -1,0 +1,57 @@
+"""Streaming-session overhead: per-step cost of a live ``ProbeSession``
+vs the plain jitted step, plus snapshot latency and offload volume.
+
+The paper's headline claim is a lightweight always-on profiler; the
+streaming analogue must hold that property *per step of a long loop*:
+the instrumented executable is built once, every step reuses it, host
+aggregation stays constant-memory, and the telemetry poll adds only a
+tiny device read. Rows:
+
+- ``streaming/plain_step``          — uninstrumented jitted baseline
+- ``streaming/session_step``        — same step under a live session
+- ``streaming/session_step_poll8``  — polling every 8 steps instead of 1
+- ``streaming/snapshot``            — cost of one full snapshot
+"""
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, layered_workload, timeit
+from repro.core import ProbeConfig, ProbeSession
+
+
+def _per_step_us(step, args, n=32):
+    step(*args)                                    # warm up / build
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = step(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    fn, args = layered_workload(8, 48)
+    base = _per_step_us(jax.jit(fn), args)
+    emit("streaming/plain_step", base)
+
+    cfg = ProbeConfig(inline="off_all", offload=1.0, buffer_depth=4)
+
+    with ProbeSession(fn, cfg) as s:
+        t = _per_step_us(s.step, args)
+        emit("streaming/session_step", t,
+             f"overhead_vs_plain={100 * (t - base) / base:+.1f}%;"
+             f"probes={len(s.paths)};dram_bytes={s.sink.bytes_received}")
+        t0 = time.perf_counter()
+        snap = s.snapshot()
+        emit("streaming/snapshot", (time.perf_counter() - t0) * 1e6,
+             f"steps={snap.steps};state_bytes={snap.state_nbytes}")
+
+    with ProbeSession(fn, cfg, poll_every=8) as s:
+        t = _per_step_us(s.step, args)
+        emit("streaming/session_step_poll8", t,
+             f"overhead_vs_plain={100 * (t - base) / base:+.1f}%")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,4 +1,4 @@
-"""Shared benchmark workloads + CSV emission."""
+"""Shared benchmark workloads + CSV/JSON emission."""
 import time
 
 import jax
@@ -7,9 +7,23 @@ import jax.numpy as jnp
 from repro.configs.registry import smoke_config
 from repro.models import Model
 
+# rows emitted since the last reset_rows() — run.py drains this into the
+# per-bench BENCH_<name>.json artifacts (see docs/benchmarks.md)
+_ROWS = []
+
 
 def emit(name, us_per_call, derived=""):
     print(f"{name},{us_per_call:.1f},{derived}")
+    _ROWS.append({"name": name, "us_per_call": round(us_per_call, 1),
+                  "derived": derived})
+
+
+def reset_rows():
+    _ROWS.clear()
+
+
+def collect_rows():
+    return list(_ROWS)
 
 
 def timeit(fn, *args, repeats=3):

@@ -1,13 +1,29 @@
 """Benchmark harness: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows (+ a few rendered charts)."""
+
+Prints ``name,us_per_call,derived`` CSV rows (+ a few rendered charts)
+and writes one ``BENCH_<name>.json`` artifact per bench into the
+output directory (``--out-dir``, default CWD) — see docs/benchmarks.md
+for how to read them.
+"""
+import argparse
+import json
+import os
 import sys
 import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=".",
+                    help="directory for BENCH_<name>.json artifacts")
+    ap.add_argument("--only", default=None,
+                    help="run a single bench by short name (e.g. streaming)")
+    args = ap.parse_args()
+
     from benchmarks import (bench_accuracy, bench_discrepancy, bench_dse,
                             bench_incremental, bench_latency_impact,
-                            bench_offload, bench_overhead, bench_roofline)
+                            bench_offload, bench_overhead, bench_roofline,
+                            bench_streaming, common)
     benches = [
         ("Table II  (cycle accuracy, 28 designs)", bench_accuracy),
         ("Fig 8/9/10 (overhead + analytical model)", bench_overhead),
@@ -16,17 +32,34 @@ def main() -> None:
         ("Fig 12    (DRAM dump ratio)", bench_offload),
         ("Fig 13    (DSE Pareto)", bench_dse),
         ("Fig 1/14 + Table IV (discrepancies)", bench_discrepancy),
+        ("Streaming (ProbeSession per-step overhead)", bench_streaming),
         ("Roofline  (dry-run derived)", bench_roofline),
     ]
+    shorts = [m.__name__.split(".")[-1].replace("bench_", "")
+              for _, m in benches]
+    if args.only and args.only not in shorts:
+        sys.exit(f"unknown bench {args.only!r}; choose from {shorts}")
     failed = []
+    os.makedirs(args.out_dir, exist_ok=True)
     for title, mod in benches:
+        short = mod.__name__.split(".")[-1].replace("bench_", "")
+        if args.only and short != args.only:
+            continue
         print(f"# === {title} ===", flush=True)
+        common.reset_rows()
+        err = None
         try:
             mod.run()
         except Exception as e:
             failed.append(title)
             traceback.print_exc()
+            err = f"{type(e).__name__}: {e}"
             print(f"{title},0.0,FAILED:{type(e).__name__}")
+        artifact = {"bench": short, "title": title,
+                    "rows": common.collect_rows(), "error": err}
+        path = os.path.join(args.out_dir, f"BENCH_{short}.json")
+        with open(path, "w") as f:
+            json.dump(artifact, f, indent=1)
     if failed:
         print(f"# {len(failed)} bench(es) failed: {failed}")
         sys.exit(1)

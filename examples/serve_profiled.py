@@ -1,0 +1,102 @@
+"""Continuous in-production profiling of a serving decode loop.
+
+Runs a >=64-step greedy decode twice — plain jitted vs under a live
+``ProbeSession`` — and demonstrates the streaming telemetry guarantees:
+
+1. outputs are bit-identical with profiling on vs off (non-intrusive);
+2. profiling state size is independent of step count (constant-memory
+   aggregation: the session retains running stats + a bounded window
+   deque, never per-step history);
+3. snapshots are available mid-flight without stopping the loop.
+
+    PYTHONPATH=src python examples/serve_profiled.py --steps 64
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import smoke_config
+from repro.core import ProbeConfig, ProbeSession
+from repro.distributed.steps import build_decode_step, build_prefill_step
+from repro.models.model import Model
+
+
+def decode_loop(model, params, step_fn, prompt, prompt_len, steps):
+    """Greedy decode `steps` tokens; step_fn is jitted-or-session.step."""
+    prefill = jax.jit(build_prefill_step(
+        model, ShapeConfig("pf", prompt.shape[1], prompt.shape[0],
+                           "prefill")))
+    logits, cache = prefill(params, {"tokens": prompt})
+    next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    toks = [np.asarray(next_tok)]
+    for i in range(steps):
+        dbatch = {"tokens": next_tok[:, None],
+                  "pos": jnp.int32(prompt_len + i)}
+        logits, cache, next_tok = step_fn(params, cache, dbatch)
+        toks.append(np.asarray(next_tok))
+    return np.stack(toks, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--steps", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    args = ap.parse_args()
+    assert args.steps >= 64, "this example demonstrates a >=64-step session"
+
+    cfg = smoke_config(args.arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+
+    # ---- reference: plain jitted decode (no profiling) ----------------
+    plain = jax.jit(build_decode_step(model), donate_argnums=())
+    ref = decode_loop(model, params, plain, prompt, args.prompt_len,
+                      args.steps)
+
+    # ---- same loop under a live streaming session ---------------------
+    session = ProbeSession(
+        build_decode_step(model),
+        ProbeConfig(offload=1.0, max_probes=12),
+        window_steps=8, max_windows=4)
+    sizes = {}
+
+    def profiled_step(params, cache, dbatch):
+        out = session.step(params, cache, dbatch)
+        if session.steps in (args.steps // 2, args.steps):
+            sizes[session.steps] = session.state_nbytes()
+        return out
+
+    out = decode_loop(model, params, profiled_step, prompt,
+                      args.prompt_len, args.steps)
+    snap = session.close()
+
+    # 1. non-intrusive: bit-identical tokens
+    assert np.array_equal(ref, out), "profiling changed model outputs!"
+    print(f"outputs bit-identical over {args.steps} decode steps "
+          f"(profiling on vs off): OK")
+
+    # 2. constant memory: same footprint mid-session and at the end
+    # (window deque is saturated at both sample points)
+    lo, hi = sorted(sizes)
+    assert sizes[lo] == sizes[hi], sizes
+    print(f"profiling state at step {lo}: {sizes[lo]}B == "
+          f"step {hi}: {sizes[hi]}B (independent of step count): OK")
+
+    # 3. the telemetry itself
+    print(f"\n# streaming snapshot after {snap.steps} steps "
+          f"({snap.span} model cycles, {snap.wall_s:.1f}s wall)")
+    print(snap.table())
+    print("\n# bottleneck ranking across the last windows")
+    print(snap.bump_chart())
+
+
+if __name__ == "__main__":
+    main()

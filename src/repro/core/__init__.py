@@ -18,14 +18,20 @@ Plus: overhead (analytical resource model), dse (automated DSE).
 from repro.core.pragma import ProbeConfig, ProbedFunction, probe
 from repro.core.hierarchy import Hierarchy, extract
 from repro.core.oracle import Oracle
-from repro.core.report import Report, bump_chart
+from repro.core.report import (Report, bump_chart, streaming_bump_chart,
+                               streaming_table)
 from repro.core.dse import run_dse, DSEResult
 from repro.core.incremental import measure_incremental
 from repro.core.overhead import OverheadModel, measure_overhead, adapt_allocation
+from repro.core.streaming import (ProbeSession, StreamAggregator,
+                                  StreamingSink, StreamSnapshot)
 
 __all__ = [
     "probe", "ProbeConfig", "ProbedFunction", "Hierarchy", "extract",
     "Oracle", "Report", "bump_chart", "run_dse", "DSEResult",
     "measure_incremental", "OverheadModel", "measure_overhead",
     "adapt_allocation",
+    # streaming telemetry (continuous in-production sessions)
+    "ProbeSession", "StreamAggregator", "StreamingSink", "StreamSnapshot",
+    "streaming_table", "streaming_bump_chart",
 ]

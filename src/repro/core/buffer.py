@@ -19,8 +19,28 @@ import numpy as np
 from repro.core.counters import c64_to_int
 
 
+def row_spans(row: np.ndarray) -> List[Tuple[int, int]]:
+    """Decode a ring row ((depth, 2, 2) uint32) into (start, end) pairs."""
+    starts = c64_to_int(row[:, 0])
+    ends = c64_to_int(row[:, 1])
+    return [(int(s), int(e))
+            for s, e in zip(np.atleast_1d(starts), np.atleast_1d(ends))]
+
+
+def row_durations(row: np.ndarray) -> np.ndarray:
+    """Decode a ring row into per-call cycle durations (int64)."""
+    spans = row_spans(row)
+    return np.array([e - s for s, e in spans], dtype=np.int64)
+
+
 class HostSink:
-    """Host-side store for offloaded probe records."""
+    """Host-side store for offloaded probe records.
+
+    ``dump`` is the ``io_callback`` target; it validates/copies the ring
+    row and hands it to ``_store``, which subclasses override to consume
+    rows differently (e.g. ``streaming.StreamingSink`` aggregates them
+    in constant memory instead of retaining the raw history).
+    """
 
     def __init__(self):
         self._lock = threading.Lock()
@@ -40,9 +60,13 @@ class HostSink:
             return
         row = np.asarray(ring_row).copy()
         with self._lock:
-            self._rows[int(probe_id)].append((int(np.asarray(base_count)), row))
             self.dumps += 1
             self.bytes_received += row.nbytes
+        self._store(int(probe_id), int(np.asarray(base_count)), row)
+
+    def _store(self, probe_id: int, base_count: int, row: np.ndarray):
+        with self._lock:
+            self._rows[probe_id].append((base_count, row))
 
     def records(self, probe_id: int) -> List[Tuple[int, int]]:
         """All offloaded (start_cycle, end_cycle) records, in order."""
@@ -50,10 +74,7 @@ class HostSink:
         with self._lock:
             rows = sorted(self._rows.get(probe_id, []), key=lambda r: r[0])
         for _base, row in rows:
-            starts = c64_to_int(row[:, 0])
-            ends = c64_to_int(row[:, 1])
-            for s, e in zip(np.atleast_1d(starts), np.atleast_1d(ends)):
-                out.append((int(s), int(e)))
+            out.extend(row_spans(row))
         return out
 
 

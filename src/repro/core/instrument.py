@@ -45,7 +45,7 @@ from jax._src.core import eval_jaxpr as _eval_jaxpr
 from repro.core import costmodel as cm
 from repro.core.buffer import HostSink
 from repro.core.counters import (c64, c64_add, c64_add_int, c64_sub,
-                                 c64_zeros, U32)
+                                 c64_to_int, c64_zeros, U32)
 from repro.core.hierarchy import Hierarchy
 
 _as_jaxpr = cm._as_jaxpr
@@ -62,6 +62,28 @@ def init_state(n_probes: int, depth: int) -> Dict[str, jnp.ndarray]:
         "last": c64_zeros((n_probes,)),
         "calls": jnp.zeros((n_probes,), U32),
         "ring": jnp.zeros((n_probes, depth, 2, 2), U32),
+    }
+
+
+def decode_record(record: Dict[str, Any]) -> Dict[str, Any]:
+    """Host-side view of a ProbeState / device record.
+
+    Splits the (hi, lo) uint32 counter pairs into plain integers:
+    ``cycle`` (int), ``starts``/``ends``/``totals`` (int64 arrays),
+    ``calls`` (int64 array) and ``ring`` (int64, shape (n, depth, 2) of
+    (start, end) pairs). The single place that knows the state layout —
+    report building and streaming aggregation both go through it.
+    """
+    ring = np.asarray(record["ring"])
+    return {
+        "cycle": int(c64_to_int(np.asarray(record["cycle"]))),
+        "starts": np.atleast_1d(c64_to_int(np.asarray(record["starts"]))),
+        "ends": np.atleast_1d(c64_to_int(np.asarray(record["ends"]))),
+        "totals": np.atleast_1d(c64_to_int(np.asarray(record["totals"]))),
+        "calls": np.asarray(record["calls"]).astype(np.int64),
+        "ring": np.stack([np.atleast_2d(c64_to_int(ring[:, :, 0])),
+                          np.atleast_2d(c64_to_int(ring[:, :, 1]))],
+                         axis=-1),
     }
 
 

@@ -85,6 +85,7 @@ class ProbedFunction:
         self._trace_key = None
         self._assignment: Optional[ProbeAssignment] = None
         self._jitted = None
+        self._jitted_stateful = None
         self.timings: Dict[str, float] = {}
 
     # -- stage 2: module extraction (once) ------------------------------
@@ -126,13 +127,18 @@ class ProbedFunction:
                               cycle_source=self.config.cycle_source,
                               sink=self.sink)
 
-        def instrumented(*a, **kw):
+        def instrumented_stateful(state, *a, **kw):
             flat = jax.tree_util.tree_leaves((a, kw))
-            state = init_state(self._assignment.n, self.config.buffer_depth)
             outs, state = interp.run(h.closed_jaxpr, flat, state)
             return jax.tree_util.tree_unflatten(self._out_tree, outs), state
 
+        def instrumented(*a, **kw):
+            # one-shot = stateful from a fresh zeroed state
+            state = init_state(self._assignment.n, self.config.buffer_depth)
+            return instrumented_stateful(state, *a, **kw)
+
         self._jitted = jax.jit(instrumented)
+        self._jitted_stateful = jax.jit(instrumented_stateful)
         self.timings["instrument_s"] = time.perf_counter() - t0
 
     # -- public ----------------------------------------------------------
@@ -140,6 +146,29 @@ class ProbedFunction:
         if self._jitted is None:
             self._build(*args, **kwargs)
         return self._jitted(*args, **kwargs)
+
+    def ensure_built(self, *args, **kwargs) -> "ProbedFunction":
+        """Trace + instrument + jit without executing (for sessions)."""
+        if self._jitted is None:
+            self._build(*args, **kwargs)
+        return self
+
+    def init_state(self):
+        """Fresh zeroed device counter state for the stateful entry."""
+        return init_state(self.assignment.n, self.config.buffer_depth)
+
+    def stateful_call(self, state, *args, **kwargs):
+        """Run one step with explicit counter state threading.
+
+        Unlike ``__call__`` (which zeroes counters per invocation), the
+        caller owns the state, so cycle/call totals accumulate across
+        steps — the streaming ``ProbeSession`` substrate. Returns
+        ``(outputs, new_state)``; the jitted executable is shared with
+        ``__call__``'s build, so no retrace happens per step.
+        """
+        if self._jitted is None:
+            self._build(*args, **kwargs)
+        return self._jitted_stateful(state, *args, **kwargs)
 
     def retarget(self, config: ProbeConfig) -> "ProbedFunction":
         """Incremental re-instrumentation: reuses the cached trace +

@@ -17,9 +17,8 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.buffer import HostSink
-from repro.core.counters import c64_to_int
 from repro.core.hierarchy import Hierarchy
-from repro.core.instrument import ProbeAssignment
+from repro.core.instrument import ProbeAssignment, decode_record
 
 
 @dataclass
@@ -98,12 +97,10 @@ class Report:
 
 def build_report(h: Hierarchy, asg: ProbeAssignment, record: Dict[str, Any],
                  sink: Optional[HostSink], cycle_source: str) -> Report:
-    starts = c64_to_int(np.asarray(record["starts"]))
-    ends = c64_to_int(np.asarray(record["ends"]))
-    totals = c64_to_int(np.asarray(record["totals"]))
-    calls = np.asarray(record["calls"]).astype(np.int64)
-    ring = np.asarray(record["ring"])
-    span = int(c64_to_int(np.asarray(record["cycle"])))
+    rec = decode_record(record)
+    starts, ends = rec["starts"], rec["ends"]
+    totals, calls, ring = rec["totals"], rec["calls"], rec["ring"]
+    span = rec["cycle"]
     rows: List[ProbeRow] = []
     for pid, path in enumerate(asg.paths):
         node = h.node(path)
@@ -111,17 +108,12 @@ def build_report(h: Hierarchy, asg: ProbeAssignment, record: Dict[str, Any],
         iters: List[Tuple[int, int]] = []
         if sink is not None and asg.spill[pid]:
             iters.extend(sink.records(pid))
-        kept = min(n_calls, asg.depth)
-        ring_iters = [(int(c64_to_int(ring[pid, s, 0])),
-                       int(c64_to_int(ring[pid, s, 1])))
-                      for s in range(kept)]
-        if asg.spill[pid]:
-            # ring holds the most recent partial window beyond the dumps
-            rem = n_calls % asg.depth
-            ring_iters = [(int(c64_to_int(ring[pid, s, 0])),
-                           int(c64_to_int(ring[pid, s, 1])))
-                          for s in range(rem)]
-        iters.extend(ring_iters)
+        # ring holds the first `depth` iterations, or — with spill — the
+        # most recent partial window beyond the dumps
+        kept = (n_calls % asg.depth) if asg.spill[pid] \
+            else min(n_calls, asg.depth)
+        iters.extend((int(ring[pid, s, 0]), int(ring[pid, s, 1]))
+                     for s in range(kept))
         static = None
         dynamic = False
         if node is not None:
@@ -148,6 +140,48 @@ def build_report(h: Hierarchy, asg: ProbeAssignment, record: Dict[str, Any],
                              source=node.source if node else "",
                              static_cycles=static, dynamic=dynamic))
     return Report(rows=rows, span=span, cycle_source=cycle_source)
+
+
+def streaming_table(snapshot) -> str:
+    """Running table for a live ``ProbeSession`` snapshot.
+
+    ``snapshot`` is a ``streaming.StreamSnapshot`` (duck-typed: ``rows``
+    with per-probe running stats, ``steps``, ``span``). Shows the
+    constant-memory aggregates — counts, totals, EMA and the
+    log-bucket-derived p50/p99 — instead of raw per-iteration spans.
+    """
+    rows = snapshot.rows
+    w = max((len(r.path) for r in rows), default=6) + 2
+    head = (f"{'module':<{w}}{'calls':>9}{'cycles':>14}{'%span':>7}"
+            f"{'mean':>10}{'ema':>10}{'min':>9}{'p50':>9}{'p99':>9}"
+            f"{'max':>9}")
+    lines = [f"# session: {snapshot.steps} steps, span={snapshot.span} "
+             f"cycles", head]
+    for r in rows:
+        pct = 100.0 * r.total_cycles / snapshot.span if snapshot.span else 0.0
+        lines.append(
+            f"{r.path:<{w}}{r.calls:>9}{r.total_cycles:>14}{pct:>6.1f}%"
+            f"{r.mean:>10.1f}{r.ema:>10.1f}{r.min:>9}{r.p50:>9}{r.p99:>9}"
+            f"{r.max:>9}")
+    return "\n".join(lines)
+
+
+def streaming_bump_chart(snapshot, top: int = 5, width: int = 18) -> str:
+    """Fig-14-style ranking shifts across the session's time windows.
+
+    Each retained window (bounded deque — constant memory) becomes one
+    bump-chart stage ranking probes by cycles spent *inside that
+    window*, so hot-spot drift over a long-running session is visible.
+    """
+    if not snapshot.windows:
+        return "(no complete windows yet)"
+    rankings: Dict[str, List[str]] = {}
+    for wdw in snapshot.windows:
+        order = np.argsort(-np.asarray(wdw.totals, dtype=np.int64),
+                           kind="stable")[:top]
+        rankings[wdw.label] = [snapshot.paths[i] for i in order
+                               if wdw.totals[i] > 0]
+    return bump_chart(rankings, width=width)
 
 
 def bump_chart(rankings: Dict[str, List[str]], width: int = 18) -> str:

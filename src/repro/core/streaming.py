@@ -1,0 +1,439 @@
+"""Streaming probe telemetry: continuous in-production profiling.
+
+One-shot ``probe(fn)`` answers "where did *this* invocation spend its
+cycles"; a serving or training loop needs "where do cycles go across
+*millions* of steps, right now" — the paper's always-available in-FPGA
+counters, kept running. This module provides that as a session:
+
+    from repro.core import ProbeSession, ProbeConfig
+
+    with ProbeSession(decode_step, ProbeConfig(targets=("layers",))) as s:
+        for batch in stream:
+            out = s.step(params, cache, batch)       # identical outputs
+            if s.steps % 512 == 0:
+                print(s.snapshot().table())          # running aggregates
+
+Design points (mirroring the paper's profiler IP constraints):
+
+- **No retracing.** The wrapped function is traced/instrumented/jitted
+  once; every ``step`` reuses the same executable with the counter
+  state threaded explicitly (``ProbedFunction.stateful_call``), so
+  cycle/call totals accumulate across steps on-device.
+- **Constant memory.** Cross-step aggregation keeps only fixed-size
+  per-probe arrays — call counts, total/min/max cycles, an EMA, and a
+  64-bucket log₂ histogram for p50/p99 — never the per-call history.
+  ``ProbeSession.state_nbytes()`` is independent of step count.
+- **Asynchronous host offload.** Ring-buffer spills (``HostSink``
+  protocol) are enqueued by the ``io_callback`` and folded into the
+  aggregates by a background worker thread, keeping the device-to-host
+  path off the step's critical path.
+- **Non-intrusive.** The instrumented step never reads probe state into
+  model math, so outputs stay bit-identical with the session on or off
+  (asserted in ``tests/test_streaming.py``).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.core.buffer import HostSink, row_durations, state_bytes
+from repro.core.pragma import ProbeConfig, ProbedFunction, probe
+from repro.core.instrument import decode_record
+from repro.core import report as report_mod
+
+HIST_BUCKETS = 64
+_I64_MAX = np.iinfo(np.int64).max
+
+
+def _buckets_of(durations: np.ndarray) -> np.ndarray:
+    """Log₂ bucket index per duration: bucket b holds [2^(b-1), 2^b)."""
+    return np.array([min(int(x).bit_length(), HIST_BUCKETS - 1)
+                     for x in durations], dtype=np.int64)
+
+
+def _bucket_rep(b: int) -> int:
+    """Representative cycle value for bucket ``b`` (its midpoint)."""
+    if b <= 0:
+        return 0
+    return ((1 << (b - 1)) + (1 << b) - 1) // 2
+
+
+class StreamAggregator:
+    """Constant-memory per-probe duration statistics.
+
+    Fixed-size arrays over ``n`` probes: call count, total, min, max,
+    EMA of per-call cycles, and a log-bucketed histogram from which
+    quantiles (p50/p99) are estimated. Thread-safe: the streaming
+    sink's worker updates it while snapshots copy it.
+    """
+
+    def __init__(self, n_probes: int, ema_alpha: float = 0.1):
+        self.n = n_probes
+        self.alpha = float(ema_alpha)
+        self.count = np.zeros(n_probes, np.int64)
+        self.total = np.zeros(n_probes, np.int64)
+        self.min = np.full(n_probes, _I64_MAX, np.int64)
+        self.max = np.zeros(n_probes, np.int64)
+        self.ema = np.zeros(n_probes, np.float64)
+        self.hist = np.zeros((n_probes, HIST_BUCKETS), np.int64)
+        self._lock = threading.Lock()
+
+    def add(self, pid: int, durations: np.ndarray):
+        """Fold per-call cycle durations (oldest first) into the stats."""
+        d = np.asarray(durations, dtype=np.int64).ravel()
+        if d.size == 0:
+            return
+        with self._lock:
+            first = self.count[pid] == 0
+            self.count[pid] += d.size
+            self.total[pid] += int(d.sum())
+            self.min[pid] = min(int(self.min[pid]), int(d.min()))
+            self.max[pid] = max(int(self.max[pid]), int(d.max()))
+            a, e = self.alpha, float(self.ema[pid])
+            for i, x in enumerate(d):
+                e = float(x) if (first and i == 0) else (1 - a) * e + a * x
+            self.ema[pid] = e
+            np.add.at(self.hist[pid], _buckets_of(d), 1)
+
+    def copy(self) -> "StreamAggregator":
+        with self._lock:
+            out = StreamAggregator(self.n, self.alpha)
+            out.count = self.count.copy()
+            out.total = self.total.copy()
+            out.min = self.min.copy()
+            out.max = self.max.copy()
+            out.ema = self.ema.copy()
+            out.hist = self.hist.copy()
+        return out
+
+    def quantile(self, pid: int, q: float) -> int:
+        """Histogram-estimated q-quantile of per-call cycles (bucket
+        midpoint, clamped to the exact observed [min, max])."""
+        n = int(self.count[pid])
+        if n == 0:
+            return 0
+        target = max(1, int(np.ceil(q * n)))
+        cum = np.cumsum(self.hist[pid])
+        b = int(np.searchsorted(cum, target))
+        return int(np.clip(_bucket_rep(b), self.min[pid], self.max[pid]))
+
+    @property
+    def nbytes(self) -> int:
+        return (self.count.nbytes + self.total.nbytes + self.min.nbytes +
+                self.max.nbytes + self.ema.nbytes + self.hist.nbytes)
+
+
+class StreamingSink(HostSink):
+    """Drop-in ``HostSink`` that aggregates spills instead of storing.
+
+    ``dump`` (the ordered ``io_callback`` target) only enqueues the ring
+    row; a daemon worker thread decodes it to per-call durations and
+    folds them into the :class:`StreamAggregator` — the raw history is
+    never retained, so memory stays constant no matter how many rings
+    spill. ``records()`` therefore returns ``[]``; use a plain
+    ``HostSink`` when full per-iteration history is wanted.
+    """
+
+    def __init__(self, ema_alpha: float = 0.1):
+        super().__init__()
+        self.ema_alpha = ema_alpha
+        self.stats: Optional[StreamAggregator] = None
+        self.dropped = 0
+        self._q: "queue.Queue" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+
+    def bind(self, n_probes: int):
+        """Size the aggregator (probe count is known only post-build)."""
+        if self.stats is None or self.stats.n != n_probes:
+            self.stats = StreamAggregator(n_probes, self.ema_alpha)
+        if self._worker is None or not self._worker.is_alive():
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    def _store(self, probe_id: int, base_count: int, row: np.ndarray):
+        self._q.put((probe_id, row))
+
+    def _drain(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                try:
+                    pid, row = item
+                    if self.stats is None:
+                        raise RuntimeError("sink not bound")
+                    self.stats.add(pid, row_durations(row))
+                except Exception:
+                    # a poisoned row must not kill the drain thread —
+                    # that would turn every later flush() into a hang
+                    self.dropped += 1
+            finally:
+                self._q.task_done()
+
+    def flush(self):
+        """Block until every enqueued spill has been aggregated."""
+        self._q.join()
+
+    def close(self):
+        if self._worker is not None and self._worker.is_alive():
+            self._q.put(None)
+            self._q.join()
+            self._worker.join(timeout=5.0)
+        self._worker = None
+
+
+@dataclass
+class WindowStat:
+    """Per-probe cycles spent inside one time window of the session."""
+    label: str
+    start_step: int
+    end_step: int
+    totals: np.ndarray            # (n_probes,) int64
+
+
+@dataclass
+class StreamRow:
+    """Running aggregate for one probe at snapshot time."""
+    path: str
+    calls: int                    # exact, from the device counter
+    total_cycles: int             # exact, from the device counter
+    observed: int                 # calls covered by duration stats
+    mean: float
+    ema: float
+    min: int
+    p50: int
+    p99: int
+    max: int
+
+
+@dataclass
+class StreamSnapshot:
+    """Point-in-time view of a live session (itself constant-size)."""
+    steps: int
+    span: int                     # cumulative cycles since session start
+    wall_s: float
+    paths: Tuple[str, ...]
+    rows: List[StreamRow]
+    windows: List[WindowStat]
+    state_nbytes: int
+
+    def table(self) -> str:
+        return report_mod.streaming_table(self)
+
+    def bump_chart(self, top: int = 5, width: int = 18) -> str:
+        return report_mod.streaming_bump_chart(self, top=top, width=width)
+
+    def row(self, path: str) -> Optional[StreamRow]:
+        for r in self.rows:
+            if r.path == path:
+                return r
+        return None
+
+    def bottleneck(self) -> Optional[StreamRow]:
+        leaf = [r for r in self.rows
+                if not any(o.path.startswith(r.path + "/")
+                           for o in self.rows)]
+        return max(leaf or self.rows, key=lambda r: r.total_cycles,
+                   default=None)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "steps": self.steps, "span": self.span, "wall_s": self.wall_s,
+            "rows": [r.__dict__ for r in self.rows],
+            "windows": [{"label": w.label, "start_step": w.start_step,
+                         "end_step": w.end_step,
+                         "totals": w.totals.tolist()}
+                        for w in self.windows],
+            "state_nbytes": self.state_nbytes,
+        }
+
+
+class ProbeSession:
+    """Continuous profiling session over a jitted step function.
+
+    Lifecycle: construct (or ``with ProbeSession(fn) as s``), call
+    ``s.step(*args)`` in place of the step function — outputs are
+    unchanged — then ``s.snapshot()`` any time for running aggregates
+    and ``s.close()`` when done (returns the final snapshot).
+
+    ``fn`` may be a plain callable or an existing ``ProbedFunction``;
+    either way the session installs its :class:`StreamingSink` before
+    the one-time build, then every step reuses the same executable.
+
+    By default every probe spills its ring (``offload=1.0``) so the
+    duration statistics cover *all* calls; pass a custom ``ProbeConfig``
+    to restrict targets or disable spilling (stats then cover only each
+    probe's first ``buffer_depth`` calls, like one-shot truncation).
+    """
+
+    def __init__(self, fn: Union[Callable, ProbedFunction],
+                 config: Optional[ProbeConfig] = None, *,
+                 window_steps: int = 16, max_windows: int = 8,
+                 ema_alpha: float = 0.1, poll_every: int = 1):
+        if isinstance(fn, ProbedFunction):
+            self.pf = fn
+            if config is not None:
+                self.pf.retarget(config)
+        else:
+            self.pf = probe(fn, config if config is not None
+                            else ProbeConfig(offload=1.0))
+        self.sink = StreamingSink(ema_alpha=ema_alpha)
+        # install before build so the Instrumenter captures this sink;
+        # close() restores the original and forces a rebuild
+        self._orig_sink = self.pf.sink
+        self.pf.sink = self.sink
+        self.pf.retarget(self.pf.config)       # force (re)build on step 1
+        self.window_steps = int(window_steps)
+        self.max_windows = int(max_windows)
+        self.poll_every = int(poll_every)
+        self._state = None
+        self._steps = 0
+        self._closed = False
+        self._t0 = 0.0
+        self._prev_totals: Optional[np.ndarray] = None
+        self._win_start = 0
+        self._windows: deque = deque(maxlen=max_windows)
+
+    # -- lifecycle -------------------------------------------------------
+    def __enter__(self) -> "ProbeSession":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    @property
+    def steps(self) -> int:
+        return self._steps
+
+    @property
+    def paths(self) -> Tuple[str, ...]:
+        return self.pf.assignment.paths
+
+    def step(self, *args, **kwargs):
+        """Run one profiled step; returns exactly ``fn(*args)``'s output."""
+        if self._closed:
+            raise RuntimeError("session is closed")
+        if self._state is None:
+            self._start(*args, **kwargs)
+        out, self._state = self.pf.stateful_call(self._state, *args,
+                                                 **kwargs)
+        self._steps += 1
+        if self._steps % self.poll_every == 0:
+            self._maybe_roll_window()
+        return out
+
+    def _start(self, *args, **kwargs):
+        self.pf.ensure_built(*args, **kwargs)
+        n = self.pf.assignment.n
+        self.sink.bind(n)
+        self._state = self.pf.init_state()
+        self._prev_totals = np.zeros(n, np.int64)
+        self._win_start = 0
+        self._t0 = time.perf_counter()
+
+    def _read_totals(self) -> np.ndarray:
+        from repro.core.counters import c64_to_int
+        return np.atleast_1d(c64_to_int(np.asarray(self._state["totals"])))
+
+    def _maybe_roll_window(self):
+        """Close the current time window once it is full. The window
+        delta telescopes to (totals now - totals at window start), so
+        the blocking device read happens once per window boundary —
+        never on the step's critical path in between."""
+        if self._steps - self._win_start < self.window_steps:
+            return
+        totals = self._read_totals()
+        self._windows.append(WindowStat(
+            f"[{self._win_start}..{self._steps})", self._win_start,
+            self._steps, totals - self._prev_totals))
+        self._prev_totals = totals
+        self._win_start = self._steps
+
+    # -- results ---------------------------------------------------------
+    def _merged_stats(self, rec: Dict[str, Any]) -> StreamAggregator:
+        """Aggregates incl. calls still sitting in the device rings."""
+        asg = self.pf.assignment
+        merged = self.sink.stats.copy()
+        for pid in range(asg.n):
+            calls = int(rec["calls"][pid])
+            rem = (calls % asg.depth) if asg.spill[pid] \
+                else min(calls, asg.depth)
+            if rem:
+                spans = rec["ring"][pid, :rem]
+                merged.add(pid, spans[:, 1] - spans[:, 0])
+        return merged
+
+    def snapshot(self) -> StreamSnapshot:
+        """Flush pending offloads and build a constant-size snapshot.
+
+        Order matters: the device_get first acts as a barrier — all
+        dispatched steps (and their ordered spill callbacks) complete
+        before the flush drains the queue, so the aggregates cover
+        every call the counters have seen."""
+        if self._state is None:
+            raise RuntimeError("no steps executed yet")
+        rec = decode_record(jax.device_get(self._state))
+        self.sink.flush()
+        asg = self.pf.assignment
+        stats = self._merged_stats(rec)
+        rows = []
+        for pid, path in enumerate(asg.paths):
+            cnt = int(stats.count[pid])
+            rows.append(StreamRow(
+                path=path,
+                calls=int(rec["calls"][pid]),
+                total_cycles=int(rec["totals"][pid]),
+                observed=cnt,
+                mean=float(stats.total[pid]) / cnt if cnt else 0.0,
+                ema=float(stats.ema[pid]),
+                min=int(stats.min[pid]) if cnt else 0,
+                p50=stats.quantile(pid, 0.50),
+                p99=stats.quantile(pid, 0.99),
+                max=int(stats.max[pid])))
+        windows = list(self._windows)
+        if self._steps > self._win_start:
+            partial = rec["totals"] - self._prev_totals
+            if partial.any():
+                windows.append(WindowStat(
+                    f"[{self._win_start}..{self._steps})*",
+                    self._win_start, self._steps, partial))
+        return StreamSnapshot(
+            steps=self._steps, span=rec["cycle"],
+            wall_s=time.perf_counter() - self._t0,
+            paths=asg.paths, rows=rows, windows=windows,
+            state_nbytes=self.state_nbytes())
+
+    def state_nbytes(self) -> int:
+        """Total profiling-state footprint: device counters + host
+        aggregates + bounded window history. Independent of ``steps``."""
+        host = self.sink.stats.nbytes if self.sink.stats is not None else 0
+        if self._prev_totals is not None:
+            host += self._prev_totals.nbytes
+        host += sum(w.totals.nbytes for w in self._windows)
+        dev = state_bytes(self.pf.assignment.n, self.pf.config.buffer_depth) \
+            if self._state is not None else 0
+        return host + dev
+
+    def close(self) -> Optional[StreamSnapshot]:
+        """End the session; returns the final snapshot (None if unused).
+
+        Restores the wrapped function's original sink (forcing a
+        rebuild on its next use) so later one-shot calls don't spill
+        into the now-dead streaming worker."""
+        if self._closed:
+            return None
+        snap = self.snapshot() if self._state is not None else None
+        self.sink.close()
+        self.pf.sink = self._orig_sink
+        self.pf.retarget(self.pf.config)
+        self._closed = True
+        return snap

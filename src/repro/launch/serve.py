@@ -1,10 +1,16 @@
 """Batched serving loop: prefill a batch of prompts, then decode tokens
 in lock step (the decode_32k / long_500k shapes lower exactly this step).
+
+``--profile`` runs the decode loop under a live ``ProbeSession``: the
+actual production step is cycle-profiled continuously (constant memory,
+outputs unchanged), with a live per-decode-step telemetry line and a
+final running table + window bump chart.
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +25,9 @@ from repro.models.model import Model
 
 def serve(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
           batch: int = 4, prompt_len: int = 32, max_new: int = 16,
-          cache_len: int = 128):
+          cache_len: int = 128, profile: bool = False,
+          profile_targets: Tuple[str, ...] = ("",),
+          profile_every: int = 8, profile_max_probes: int = 16):
     cfg = smoke_config(arch) if smoke else get_config(arch)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -29,7 +37,18 @@ def serve(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
 
     prefill = jax.jit(build_prefill_step(
         model, ShapeConfig("pf", cache_len, batch, "prefill")))
-    decode = jax.jit(build_decode_step(model), donate_argnums=(1,))
+    profile_every = max(profile_every, 1)
+    session = None
+    if profile:
+        from repro.core import ProbeConfig, ProbeSession
+        session = ProbeSession(
+            build_decode_step(model),
+            ProbeConfig(targets=profile_targets, offload=1.0,
+                        max_probes=profile_max_probes),
+            window_steps=max(profile_every, 1))
+        decode = session.step
+    else:
+        decode = jax.jit(build_decode_step(model), donate_argnums=(1,))
 
     if cfg.frontend != "none":
         fb = synth_frontend_batch(cfg, batch, prompt_len, jnp.bfloat16, key)
@@ -54,11 +73,25 @@ def serve(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
             dbatch = {"tokens": next_tok[:, None], "pos": pos}
         logits, cache, next_tok = decode(params, cache, dbatch)
         out_tokens.append(np.asarray(next_tok))
+        if session is not None and session.steps % profile_every == 0:
+            snap = session.snapshot()
+            hot = snap.bottleneck()
+            hot_s = f"{hot.path} (ema {hot.ema:.1f} cyc/call)" if hot else "-"
+            print(f"[probe] decode step {session.steps:4d}: "
+                  f"span={snap.span} cycles, state={snap.state_nbytes}B, "
+                  f"hot={hot_s}", flush=True)
     t_decode = time.time() - t0
     toks = np.stack(out_tokens, axis=1)
     print(f"prefill {prompt_len} tokens x{batch}: {t_prefill * 1e3:.1f} ms; "
           f"decode {max_new} steps: {t_decode * 1e3:.1f} ms "
           f"({t_decode / max(max_new - 1, 1) * 1e3:.2f} ms/tok)")
+    if session is not None:
+        final = session.close()
+        if final is not None:
+            print("\n# streaming probe telemetry (decode loop)")
+            print(final.table())
+            print("\n# bottleneck drift across windows")
+            print(final.bump_chart())
     return toks
 
 
@@ -68,9 +101,16 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--profile", action="store_true",
+                    help="run the decode loop under a live ProbeSession")
+    ap.add_argument("--profile-targets", default="",
+                    help="comma-separated probe subtree roots")
+    ap.add_argument("--profile-every", type=int, default=8)
     args = ap.parse_args()
     toks = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-                 max_new=args.max_new)
+                 max_new=args.max_new, profile=args.profile,
+                 profile_targets=tuple(args.profile_targets.split(",")),
+                 profile_every=args.profile_every)
     print("sampled token ids (first sequence):", toks[0].tolist())
 
 

@@ -1,5 +1,6 @@
 """End-to-end trainer (example application + the serving ground for the
-RealProbe integration: ``--probe`` profiles the actual train step).
+RealProbe integration: ``--probe`` runs the whole loop under a streaming
+``ProbeSession`` and prints periodic telemetry snapshots).
 
 Runs on anything from 1 CPU device (smoke configs) to the production
 mesh; fault-tolerance wiring (atomic async checkpoints, SIGTERM hook,
@@ -22,7 +23,6 @@ from repro.configs.registry import get_config, smoke_config
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.distributed import sharding as shd
 from repro.distributed.steps import build_train_step
-from repro.launch.mesh import make_mesh
 from repro.models.model import Model
 from repro.optim import adamw
 
@@ -31,13 +31,18 @@ def train(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
           steps: int = 20, batch: int = 8, seq: int = 128,
           mesh_shape=None, probe_targets: Optional[tuple] = None,
           checkpoint_dir: Optional[str] = None, resume: bool = False,
-          tcfg: Optional[TrainConfig] = None, log_every: int = 10):
+          tcfg: Optional[TrainConfig] = None, log_every: int = 10,
+          probe_every: int = 0):
     cfg = smoke_config(arch) if smoke else get_config(arch)
     model = Model(cfg)
     tcfg = tcfg or TrainConfig(total_steps=steps, warmup_steps=max(steps // 10, 1),
                                checkpoint_dir=checkpoint_dir or "/tmp/repro_ckpt")
 
-    mesh = make_mesh(*mesh_shape) if mesh_shape else None
+    if mesh_shape:
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh(*mesh_shape)
+    else:
+        mesh = None
     rules = shd.filter_rules(shd.TRAIN_RULES, mesh) if mesh else None
 
     pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size, seq_len=seq,
@@ -58,11 +63,20 @@ def train(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
             pipe.state.step = int(extra["data_step"])
 
     step_fn = build_train_step(model, tcfg)
-    jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+    session = None
+    if probe_targets is not None:
+        from repro.core import ProbeConfig, ProbeSession
+        session = ProbeSession(
+            step_fn, ProbeConfig(targets=tuple(probe_targets),
+                                 offload=1.0, max_probes=16),
+            window_steps=max(probe_every or log_every, 1))
+        run_jitted = session.step
+    else:
+        run_jitted = jax.jit(step_fn, donate_argnums=(0, 1))
 
     def run_step(params, opt_state, batch_np):
         b = {k: jnp.asarray(v) for k, v in batch_np.items()}
-        return jitted(params, opt_state, b)
+        return run_jitted(params, opt_state, b)
 
     ctx = shd.axis_rules(rules, mesh)
     history = []
@@ -83,6 +97,12 @@ def train(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
                       f"lr {float(metrics['lr']):.2e} "
                       f"gnorm {float(metrics['grad_norm']):7.3f} "
                       f"({dt:.1f}s)", flush=True)
+            if session is not None and \
+                    session.steps % (probe_every or log_every) == 0:
+                snap = session.snapshot()
+                print(f"[probe] {snap.steps} steps, span={snap.span} "
+                      f"cycles, state={snap.state_nbytes}B", flush=True)
+                print(snap.table(), flush=True)
             if ckpt and (step + 1) % tcfg.checkpoint_every == 0:
                 ckpt.save(step + 1, (params, opt_state),
                           extra={"step": step + 1,
@@ -91,6 +111,12 @@ def train(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
             ckpt.save(steps, (params, opt_state),
                       extra={"step": steps, "data_step": pipe.state.step})
             ckpt.wait()
+    if session is not None:
+        final = session.close()
+        if final is not None:
+            print("\n# final streaming probe telemetry")
+            print(final.table())
+            print(final.bump_chart())
     return params, opt_state, history
 
 
@@ -104,9 +130,18 @@ def main():
                     help="full config (needs real hardware)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--probe", action="store_true",
+                    help="profile the train step with a live ProbeSession")
+    ap.add_argument("--probe-targets", default="",
+                    help="comma-separated probe subtree roots")
+    ap.add_argument("--probe-every", type=int, default=0,
+                    help="snapshot period in steps (default: log-every)")
     args = ap.parse_args()
     train(args.arch, smoke=not args.full, steps=args.steps,
           batch=args.batch, seq=args.seq,
+          probe_targets=(tuple(args.probe_targets.split(","))
+                         if args.probe else None),
+          probe_every=args.probe_every,
           checkpoint_dir=args.checkpoint_dir, resume=args.resume)
 
 

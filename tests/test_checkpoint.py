@@ -56,6 +56,7 @@ def test_elastic_restore_resharding(tmp_path):
         assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_resumes_training(tmp_path):
     from repro.launch.train import train
     d = str(tmp_path / "ck")

@@ -8,6 +8,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow   # subprocess-spawned 8-device meshes
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

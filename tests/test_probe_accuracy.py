@@ -123,6 +123,7 @@ def test_probe_first4_truncation_without_offload():
     assert row.total_cycles == oc.totals[li]
 
 
+@pytest.mark.slow
 def test_probe_train_step_exact(key):
     from repro.configs.registry import smoke_config
     from repro.models import Model

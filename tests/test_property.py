@@ -2,6 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="dev-only dependency — pip install -r requirements-dev.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.counters import (c64, c64_add, c64_add_int, c64_sub,

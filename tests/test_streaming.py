@@ -1,0 +1,211 @@
+"""Streaming telemetry invariants: the constant-memory aggregates must
+agree EXACTLY with one-shot records on the same trace, the session's
+state footprint must not grow with step count, and a live session must
+never change model outputs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ProbeConfig, ProbeSession, probe
+from repro.core.streaming import StreamAggregator, StreamingSink, _buckets_of
+from repro.core.buffer import row_durations
+from repro.core.counters import int_to_pair
+from repro.core.instrument import decode_record
+
+
+def _workload(x, w):
+    def body(c, _):
+        with jax.named_scope("layer"):
+            with jax.named_scope("mm"):
+                c = jnp.tanh(c @ w) + c
+        return c, None
+    with jax.named_scope("layers"):
+        x, _ = jax.lax.scan(body, x, None, length=5)
+
+    def cond(s):
+        return jnp.sum(jnp.abs(s[0])) < 1e3
+
+    def grow(s):
+        with jax.named_scope("grow"):
+            return (s[0] * 1.4 + 0.1, s[1] + 1)
+    with jax.named_scope("dynamic"):
+        x, n = jax.lax.while_loop(cond, grow, (x, jnp.int32(0)))
+    with jax.named_scope("head"):
+        return jnp.sum(x * x), n
+
+
+_ARGS = (jnp.ones((4, 8)) * 0.05, jnp.full((8, 8), 0.07))
+_CFG = ProbeConfig(inline="off_all", offload=1.0, buffer_depth=2)
+
+
+def _one_shot_durations():
+    """Per-probe per-call cycle durations from a one-shot probe run
+    (full history: HostSink records + ring remainder via the report)."""
+    pf = probe(_workload, _CFG)
+    _, rec = pf(*_ARGS)
+    rep = pf.report(rec)
+    return {r.path: np.array([e - s for s, e in r.iters], np.int64)
+            for r in rep.rows}
+
+
+def test_aggregator_matches_one_shot_records():
+    """Session aggregates over N identical steps == N x one-shot stats
+    (the deterministic model clock makes every step identical)."""
+    durs = _one_shot_durations()
+    N = 7
+    with ProbeSession(_workload, _CFG) as s:
+        for _ in range(N):
+            s.step(*_ARGS)
+        snap = s.snapshot()
+    assert set(snap.paths) == set(durs)
+    assert any(r.calls for r in snap.rows)
+    for r in snap.rows:
+        d = durs[r.path]
+        assert r.calls == N * len(d), r.path
+        assert r.observed == r.calls, r.path          # full coverage
+        assert r.total_cycles == N * int(d.sum()), r.path
+        if len(d) == 0:                # e.g. a never-entered while-cond
+            continue
+        assert r.min == int(d.min()), r.path
+        assert r.max == int(d.max()), r.path
+        assert r.min <= r.p50 <= r.p99 <= r.max, r.path
+    # histograms: exactly N copies of the one-shot bucket counts
+    merged = s._merged_stats(decode_record(jax.device_get(s._state)))
+    for pid, path in enumerate(snap.paths):
+        expect = np.zeros_like(merged.hist[pid])
+        np.add.at(expect, _buckets_of(durs[path]), N)
+        assert np.array_equal(merged.hist[pid], expect), path
+
+
+def test_constant_memory_across_100_plus_steps():
+    """State footprint is flat once the window deque saturates, and no
+    raw spill history is ever retained."""
+    sizes = {}
+    with ProbeSession(_workload, _CFG, window_steps=4, max_windows=4) as s:
+        for i in range(1, 121):
+            s.step(*_ARGS)
+            if i in (40, 80, 120):
+                sizes[i] = s.state_nbytes()
+        s.sink.flush()
+        assert s.sink._rows == {}            # nothing stored, only folded
+        assert s.sink.dumps > 0              # ...but spills did happen
+    assert sizes[40] == sizes[80] == sizes[120], sizes
+    assert len(s._windows) == 4
+
+
+def test_outputs_bit_identical_under_live_session():
+    """Non-intrusiveness holds per step with varying inputs."""
+    ref = jax.jit(_workload)
+    with ProbeSession(_workload, _CFG) as s:
+        for i in range(6):
+            x = _ARGS[0] + 0.01 * i
+            got = s.step(x, _ARGS[1])
+            want = ref(x, _ARGS[1])
+            for a, b in zip(jax.tree_util.tree_leaves(got),
+                            jax.tree_util.tree_leaves(want)):
+                assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_session_totals_match_device_counters():
+    """sum(per-call durations) must equal the exact device totals —
+    the offload path may never lose cycles."""
+    with ProbeSession(_workload, _CFG) as s:
+        for _ in range(5):
+            s.step(*_ARGS)
+        snap = s.snapshot()
+    for r in snap.rows:
+        assert r.observed == r.calls, r.path
+        assert r.mean * r.observed == pytest.approx(r.total_cycles), r.path
+
+
+def test_no_offload_truncates_to_ring_depth():
+    cfg = ProbeConfig(inline="off_all", offload=0.0, buffer_depth=2)
+    with ProbeSession(_workload, cfg) as s:
+        for _ in range(4):
+            s.step(*_ARGS)
+        snap = s.snapshot()
+    active = [r for r in snap.rows if r.calls]
+    assert active
+    for r in active:
+        # duration stats cover only the first buffer_depth calls...
+        assert r.observed == min(r.calls, 2), r.path
+        # ...but counters stay exact: >=1 call per step for live probes
+        assert r.calls >= 4, r.path
+
+
+def test_stateful_call_accumulates_across_steps():
+    pf = probe(_workload, _CFG)
+    _, rec1 = pf(*_ARGS)
+    one = np.atleast_1d(np.asarray(rec1["totals"]))
+    state = pf.init_state()
+    for _ in range(3):
+        _, state = pf.stateful_call(state, *_ARGS)
+    three = np.atleast_1d(np.asarray(state["totals"]))
+    from repro.core.counters import c64_to_int
+    assert np.array_equal(c64_to_int(three), 3 * c64_to_int(one))
+
+
+def test_session_reuses_existing_probed_function():
+    pf = probe(_workload, _CFG)
+    pf(*_ARGS)                                 # already built once
+    with ProbeSession(pf) as s:
+        out = s.step(*_ARGS)
+        snap = s.snapshot()                    # barrier + flush
+        assert s.sink.dumps > 0                # streaming sink installed
+    assert snap.steps == 1
+    ref = jax.jit(_workload)(*_ARGS)
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(ref)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_close_restores_original_sink_for_one_shot_use():
+    """After a session ends, the wrapped function must profile one-shot
+    again with full spill history (not the dead streaming worker)."""
+    pf = probe(_workload, _CFG)
+    orig_sink = pf.sink
+    with ProbeSession(pf) as s:
+        s.step(*_ARGS)
+    assert pf.sink is orig_sink
+    _, rec = pf(*_ARGS)                        # rebuilt on original sink
+    jax.block_until_ready(rec)                 # callbacks land with it
+    assert pf.sink.dumps > 0
+    rep = pf.report(rec)
+    hot = rep.row("layers/scan#0/layer")
+    assert hot is not None and len(hot.iters) == hot.calls
+
+
+def test_aggregator_unit_stats():
+    agg = StreamAggregator(1, ema_alpha=0.5)
+    agg.add(0, np.array([10, 10, 10, 1000]))
+    assert agg.count[0] == 4
+    assert agg.total[0] == 1030
+    assert agg.min[0] == 10 and agg.max[0] == 1000
+    # EMA leans toward the most recent (large) sample
+    assert agg.ema[0] > 10
+    assert agg.quantile(0, 0.5) >= 10
+    assert 10 <= agg.quantile(0, 0.99) <= 1000
+    before = agg.nbytes
+    agg.add(0, np.arange(1, 1000))
+    assert agg.nbytes == before                # constant memory
+
+
+def test_streaming_sink_async_drain_is_lossless():
+    sink = StreamingSink()
+    sink.bind(2)
+    depth = 4
+    row = np.zeros((depth, 2, 2), np.uint32)
+    for s_ in range(depth):
+        row[s_, 0] = int_to_pair(100 * s_)
+        row[s_, 1] = int_to_pair(100 * s_ + 7)
+    for k in range(50):
+        sink.dump(k % 2, np.True_, k * depth, row)
+    sink.flush()
+    assert sink.dumps == 50
+    assert sink.stats.count[0] == 25 * depth
+    assert sink.stats.count[1] == 25 * depth
+    assert sink.stats.total[0] == 25 * depth * 7
+    assert np.array_equal(row_durations(row), np.full(depth, 7))
+    sink.close()
+    assert sink.records(0) == []               # history is not retained

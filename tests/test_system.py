@@ -10,6 +10,7 @@ from repro.core import probe, ProbeConfig
 from repro.core.counters import c64_to_int
 
 
+@pytest.mark.slow
 def test_training_loss_decreases(tmp_path):
     from repro.launch.train import train
     _, _, hist = train("tinyllama-1.1b", steps=40, batch=4, seq=64,
@@ -19,6 +20,7 @@ def test_training_loss_decreases(tmp_path):
     assert last < first - 0.15, (first, last)
 
 
+@pytest.mark.slow
 def test_training_resume_continues(tmp_path):
     from repro.checkpoint import Checkpointer
     from repro.launch.train import train
@@ -41,6 +43,7 @@ def test_serve_decodes_tokens():
     assert toks.max() < smoke_config("tinyllama-1.1b").vocab_size
 
 
+@pytest.mark.slow
 def test_probed_production_train_step(key):
     """RealProbe on the REAL train step (optimizer included): exact vs
     oracle + identical numerics to the unprobed step."""
@@ -71,6 +74,7 @@ def test_probed_production_train_step(key):
     assert rep.timeline()
 
 
+@pytest.mark.slow
 def test_dryrun_cell_machinery_smoke():
     """lower_cell-equivalent flow on 1 device with a smoke config: the
     same builders + sharding plumbing the 512-way dry-run uses."""
