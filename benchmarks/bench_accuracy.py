@@ -2,7 +2,6 @@
 the oracle interpreter ("Co-sim"), and the in-device counters
 ("RealProbe"), cross-verified for EXACT equality oracle==device on 28
 workloads. Reports the static-vs-measured deviation per benchmark."""
-import jax
 import numpy as np
 
 from benchmarks.common import emit, layered_workload, model_workloads, timeit

@@ -7,8 +7,6 @@
 - Table IV: the discrepancy under different configurations (sizes,
   buffer depths) — bottleneck RANKINGS shift between stages (Fig 14).
 """
-import jax
-import numpy as np
 
 from benchmarks.common import emit, layered_workload
 from repro.core import ProbeConfig, probe
@@ -21,7 +19,6 @@ def run():
         pf = probe(fn, ProbeConfig(inline="off_all"))
         out, rec = pf(*args)
         rep = pf.report(rec)
-        rows = {r.path: r for r in rep.rows}
         top = [r for r in rep.rows if "/" not in r.path]
         for r in top:
             static = "?" if r.dynamic else str(r.static_cycles)

@@ -1,7 +1,20 @@
-"""Fig 13 analogue: automated DSE over storage class x dump ratio ->
-Pareto frontier of (resource, DRAM bandwidth, latency)."""
+"""Fig 13 analogue, two loops:
+
+1) automated DSE over *profiling* configurations (storage class x dump
+   ratio -> Pareto frontier of resource/DRAM-bandwidth/latency), and
+2) the probe-guided *kernel* autotuner: DSEEngine on the flash-attention
+   search space — cold run measures, warm run must be 100% cache hits,
+   and the tuned config must beat the default's probed cycles/step.
+
+The kernel-autotune rows carry deterministic model-clock metrics
+(``cycles=``, ``measurements=``, ``speedup_x1000=``) so the CI
+regression gate can compare them across machines.
+"""
+import tempfile
+
 from benchmarks.common import emit, layered_workload
-from repro.core import ProbeConfig, run_dse
+from repro.core import DSEEngine, EvalCache, ProbeConfig, run_dse
+from repro.kernels.search_spaces import flash_attention_space
 
 
 def run():
@@ -18,6 +31,39 @@ def run():
     best = res.best()
     emit("dse/BEST", 0.0,
          f"{best.storage}_dump{int(best.offload_ratio * 100)}pct")
+
+    # ---- probe-guided kernel autotuning (DSEEngine) -------------------
+    def mk_engine(cache):
+        space = flash_attention_space(B=1, H=2, S=256, D=32,
+                                      blocks_q=(64, 128, 256),
+                                      blocks_k=(64, 128, 256),
+                                      pipelines=(1, 2))
+        return DSEEngine(space, cache=cache, max_steps=4)
+
+    cache = EvalCache(tempfile.mkdtemp(prefix="bench_dse_"))
+    cold = mk_engine(cache).tune()
+    warm = mk_engine(cache).tune()
+
+    d, b = cold.default, cold.best
+    cfg = ",".join(f"{k}={v}" for k, v in sorted(b.config.items()))
+    emit("dse/tune/default", 0.0,
+         f"cycles={d.cycles_per_step:.0f}")
+    emit("dse/tune/best", 0.0,
+         f"cycles={b.cycles_per_step:.0f};config={cfg}")
+    emit("dse/tune/speedup", 0.0,
+         f"speedup_x1000={cold.speedup * 1000:.0f}")
+    emit("dse/tune/cold", cold.wall_s * 1e6,
+         f"measurements={cold.n_measurements};"
+         f"probed_steps={cold.measured_steps};"
+         f"candidates={cold.n_candidates}")
+    emit("dse/tune/warm", warm.wall_s * 1e6,
+         f"measurements={warm.n_measurements};"
+         f"cache_hits={warm.n_cache_hits}")
+    assert b.cycles_per_step < d.cycles_per_step, \
+        "autotuner failed to beat the default flash_attention config"
+    assert warm.n_measurements == 0, \
+        "warm-cache DSE re-measured despite identical kernels/configs"
+    assert warm.best.config == cold.best.config
 
 
 if __name__ == "__main__":

@@ -4,11 +4,9 @@
 - Fig 9: analytical overhead model predictions vs measured,
 - Fig 10: RealProbe probes vs full-trace ("ILA") instrumentation."""
 import jax
-import jax.numpy as jnp
 
 from benchmarks.common import emit, layered_workload
 from repro.core import OverheadModel, ProbeConfig, measure_overhead
-from repro.core.costmodel import eqn_cost
 from repro.core.hierarchy import extract
 
 
@@ -66,7 +64,7 @@ def run():
     # (recording EVERY equation's output checksum — signal-level capture)
     def ila_style(fn):
         def wrapped(*a):
-            closed = jax.make_jaxpr(fn)(*a)
+            jax.make_jaxpr(fn)(*a)
             # cost of materializing a trace entry per eqn
             return None
         return wrapped

@@ -15,9 +15,8 @@ tiny device read. Rows:
 import time
 
 import jax
-import numpy as np
 
-from benchmarks.common import emit, layered_workload, timeit
+from benchmarks.common import emit, layered_workload
 from repro.core import ProbeConfig, ProbeSession
 
 

@@ -1,0 +1,160 @@
+"""CI benchmark-regression gate: compare fresh BENCH_*.json artifacts
+against committed baselines and fail on any metric that regresses more
+than the tolerance (default 15%).
+
+    PYTHONPATH=src python benchmarks/run.py --only accuracy,overhead,dse \
+        --out-dir /tmp/bench
+    python benchmarks/check_regression.py \
+        --baseline benchmarks/baselines --current /tmp/bench
+
+What gets compared
+------------------
+Each row's ``derived`` string carries ``key=value`` pairs. Keys listed
+in ``LOWER_BETTER`` / ``HIGHER_BETTER`` are deterministic model-clock or
+resource metrics (cycles, state bytes, extra equations, ...) and are
+gated at the tolerance on every machine. Wall-clock ``us_per_call``
+values are only gated with ``--include-timing`` (meaningful on a quiet,
+baseline-matched machine — not on shared CI runners).
+
+Rows present in the baseline but missing from the current run fail the
+gate (a silently dropped benchmark is a regression); new rows pass with
+a note so adding metrics never blocks.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+from typing import Dict, Iterator, List, Optional, Tuple
+
+# deterministic metrics, gated by default
+LOWER_BETTER = (
+    "cycles", "span", "state_B", "state_bytes", "dram_B", "extra_eqns",
+    "probe_ops", "probe_bytes", "measurements", "probed_steps",
+    "mean_cycles",
+)
+HIGHER_BETTER = ("speedup_x1000", "saving", "exact", "cache_hits")
+
+_NUM = re.compile(r"^(-?\d+(?:\.\d+)?)(?:[%x]?)$")
+
+
+def parse_derived(derived: str) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        key, _, val = part.partition("=")
+        m = _NUM.match(val.strip().split("/")[0])
+        if m:
+            out[key.strip()] = float(m.group(1))
+    return out
+
+
+def load_rows(path: str) -> Dict[str, dict]:
+    with open(path) as f:
+        art = json.load(f)
+    if art.get("error"):
+        raise SystemExit(f"{path}: bench recorded an error: {art['error']}")
+    return {r["name"]: r for r in art.get("rows", [])}
+
+
+def iter_metrics(row: dict, include_timing: bool
+                 ) -> Iterator[Tuple[str, float, bool]]:
+    """Yields (metric name, value, lower_is_better)."""
+    for key, val in parse_derived(row.get("derived", "")).items():
+        if key in LOWER_BETTER:
+            yield key, val, True
+        elif key in HIGHER_BETTER:
+            yield key, val, False
+    if include_timing and row.get("us_per_call", 0) > 0:
+        yield "us_per_call", float(row["us_per_call"]), True
+
+
+def compare(baseline_dir: str, current_dir: str, *, tolerance: float = 0.15,
+            include_timing: bool = False, min_value: float = 1.0
+            ) -> Tuple[List[str], List[str]]:
+    """Returns (failures, notes)."""
+    failures: List[str] = []
+    notes: List[str] = []
+    base_files = sorted(glob.glob(os.path.join(baseline_dir,
+                                               "BENCH_*.json")))
+    if not base_files:
+        failures.append(f"no BENCH_*.json baselines in {baseline_dir}")
+        return failures, notes
+    for bf in base_files:
+        name = os.path.basename(bf)
+        cf = os.path.join(current_dir, name)
+        if not os.path.exists(cf):
+            failures.append(f"{name}: missing from current run")
+            continue
+        base_rows = load_rows(bf)
+        cur_rows = load_rows(cf)
+        for row_name, brow in base_rows.items():
+            crow = cur_rows.get(row_name)
+            if crow is None:
+                failures.append(f"{name}:{row_name}: row disappeared")
+                continue
+            cur_metrics = dict((k, v) for k, v, _ in
+                               iter_metrics(crow, include_timing))
+            for metric, bval, lower in iter_metrics(brow, include_timing):
+                if metric not in cur_metrics:
+                    failures.append(
+                        f"{name}:{row_name}.{metric}: metric disappeared")
+                    continue
+                cval = cur_metrics[metric]
+                if abs(bval) < min_value and abs(cval) < min_value:
+                    continue          # noise floor
+                if lower:
+                    worse = cval > bval * (1 + tolerance)
+                else:
+                    worse = cval < bval * (1 - tolerance)
+                if worse:
+                    direction = "up" if lower else "down"
+                    failures.append(
+                        f"{name}:{row_name}.{metric}: {bval:g} -> {cval:g} "
+                        f"({direction} {abs(cval - bval) / max(abs(bval), 1e-12) * 100:.1f}%"
+                        f" > {tolerance * 100:.0f}% tolerance)")
+        extra = set(cur_rows) - set(base_rows)
+        if extra:
+            notes.append(f"{name}: {len(extra)} new row(s) not in baseline "
+                         f"(ok): {sorted(extra)[:5]}")
+    return failures, notes
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail if benchmark metrics regress vs baselines")
+    ap.add_argument("--baseline", default="benchmarks/baselines",
+                    help="directory of committed BENCH_*.json baselines")
+    ap.add_argument("--current", required=True,
+                    help="directory of freshly produced BENCH_*.json")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed relative regression (0.15 = 15%%)")
+    ap.add_argument("--include-timing", action="store_true",
+                    help="also gate wall-clock us_per_call values")
+    ap.add_argument("--min-value", type=float, default=1.0,
+                    help="ignore metrics below this absolute value")
+    args = ap.parse_args(argv)
+
+    failures, notes = compare(args.baseline, args.current,
+                              tolerance=args.tolerance,
+                              include_timing=args.include_timing,
+                              min_value=args.min_value)
+    for n in notes:
+        print(f"NOTE  {n}")
+    if failures:
+        for f in failures:
+            print(f"FAIL  {f}")
+        print(f"# {len(failures)} regression(s) beyond "
+              f"{args.tolerance * 100:.0f}%")
+        return 1
+    print("# benchmark regression gate: all metrics within "
+          f"{args.tolerance * 100:.0f}% of baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -4,6 +4,12 @@ Prints ``name,us_per_call,derived`` CSV rows (+ a few rendered charts)
 and writes one ``BENCH_<name>.json`` artifact per bench into the
 output directory (``--out-dir``, default CWD) — see docs/benchmarks.md
 for how to read them.
+
+Artifacts are deterministic where the underlying metric is: JSON is
+key-sorted, rows keep emission order, the RNG seed is fixed, and no
+timestamps are recorded — so committed baselines diff cleanly and the
+CI regression gate (benchmarks/check_regression.py) can compare the
+model-clock metrics exactly.
 """
 import argparse
 import json
@@ -11,14 +17,30 @@ import os
 import sys
 import traceback
 
+# allow both `python -m benchmarks.run` and `python benchmarks/run.py`
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out-dir", default=".",
                     help="directory for BENCH_<name>.json artifacts")
     ap.add_argument("--only", default=None,
-                    help="run a single bench by short name (e.g. streaming)")
+                    help="run a subset by short name, comma-separated "
+                         "(e.g. 'accuracy,dse,streaming')")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="global RNG seed (fixed for diffable artifacts)")
     args = ap.parse_args()
+
+    import numpy as np
+    np.random.seed(args.seed)
+    import jax
+    try:
+        # pin the PRNG implementation so key-derived data (and thus the
+        # deterministic metrics) match across jax versions
+        jax.config.update("jax_threefry_partitionable", False)
+    except AttributeError:
+        pass
 
     from benchmarks import (bench_accuracy, bench_discrepancy, bench_dse,
                             bench_incremental, bench_latency_impact,
@@ -30,20 +52,24 @@ def main() -> None:
         ("Fig 7/11  (incremental synthesis)", bench_incremental),
         ("Table III (latency/Fmax impact)", bench_latency_impact),
         ("Fig 12    (DRAM dump ratio)", bench_offload),
-        ("Fig 13    (DSE Pareto)", bench_dse),
+        ("Fig 13    (DSE Pareto + kernel autotune)", bench_dse),
         ("Fig 1/14 + Table IV (discrepancies)", bench_discrepancy),
         ("Streaming (ProbeSession per-step overhead)", bench_streaming),
         ("Roofline  (dry-run derived)", bench_roofline),
     ]
     shorts = [m.__name__.split(".")[-1].replace("bench_", "")
               for _, m in benches]
-    if args.only and args.only not in shorts:
-        sys.exit(f"unknown bench {args.only!r}; choose from {shorts}")
+    only = None
+    if args.only:
+        only = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = [s for s in only if s not in shorts]
+        if unknown:
+            sys.exit(f"unknown bench(es) {unknown}; choose from {shorts}")
     failed = []
     os.makedirs(args.out_dir, exist_ok=True)
     for title, mod in benches:
         short = mod.__name__.split(".")[-1].replace("bench_", "")
-        if args.only and short != args.only:
+        if only is not None and short not in only:
             continue
         print(f"# === {title} ===", flush=True)
         common.reset_rows()
@@ -55,11 +81,12 @@ def main() -> None:
             traceback.print_exc()
             err = f"{type(e).__name__}: {e}"
             print(f"{title},0.0,FAILED:{type(e).__name__}")
-        artifact = {"bench": short, "title": title,
+        artifact = {"bench": short, "title": title, "seed": args.seed,
                     "rows": common.collect_rows(), "error": err}
         path = os.path.join(args.out_dir, f"BENCH_{short}.json")
         with open(path, "w") as f:
-            json.dump(artifact, f, indent=1)
+            json.dump(artifact, f, indent=1, sort_keys=True)
+            f.write("\n")
     if failed:
         print(f"# {len(failed)} bench(es) failed: {failed}")
         sys.exit(1)

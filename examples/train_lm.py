@@ -12,7 +12,7 @@ accelerator).
 import argparse
 
 from repro.configs.base import TrainConfig
-from repro.configs.registry import get_config, smoke_config
+from repro.configs.registry import get_config
 from repro.launch.train import train
 
 

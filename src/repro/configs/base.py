@@ -7,7 +7,7 @@ dataclasses so they can be hashed into jit/static caches.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 

@@ -11,7 +11,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List
 
-from repro.configs.base import ModelConfig, MoEConfig, SSMConfig, SHAPES, ShapeConfig
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
 
 from repro.configs import (  # noqa: E402  (import order is the registry)
     minicpm_2b,

@@ -20,8 +20,11 @@ from repro.core.hierarchy import Hierarchy, extract
 from repro.core.oracle import Oracle
 from repro.core.report import (Report, bump_chart, streaming_bump_chart,
                                streaming_table)
-from repro.core.dse import run_dse, DSEResult
-from repro.core.incremental import measure_incremental
+from repro.core.dse import (run_dse, DSEResult, DSEEngine, SearchSpace,
+                            Trial, TuneResult)
+from repro.core.costmodel import DeviceBudget, KernelResources
+from repro.core.incremental import (measure_incremental, EvalCache,
+                                    device_kind, lowered_fingerprint)
 from repro.core.overhead import OverheadModel, measure_overhead, adapt_allocation
 from repro.core.streaming import (ProbeSession, StreamAggregator,
                                   StreamingSink, StreamSnapshot)
@@ -31,6 +34,9 @@ __all__ = [
     "Oracle", "Report", "bump_chart", "run_dse", "DSEResult",
     "measure_incremental", "OverheadModel", "measure_overhead",
     "adapt_allocation",
+    # probe-guided kernel autotuning (DSE engine + incremental eval cache)
+    "DSEEngine", "SearchSpace", "Trial", "TuneResult", "DeviceBudget",
+    "KernelResources", "EvalCache", "device_kind", "lowered_fingerprint",
     # streaming telemetry (continuous in-production sessions)
     "ProbeSession", "StreamAggregator", "StreamingSink", "StreamSnapshot",
     "streaming_table", "streaming_bump_chart",

@@ -14,17 +14,16 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from typing import Optional, Tuple
 
-import jax
 import numpy as np
-from jax import core
 
 # -------------------------------------------------- hardware constants
 PEAK_FLOPS_BF16 = 197e12          # per chip
 HBM_BW = 819e9                    # bytes/s
 ICI_BW = 50e9                     # bytes/s/link (reference; used by roofline)
 CLOCK_HZ = 940e6                  # TPU v5e core clock
+VMEM_BYTES = 16 * 2 ** 20         # on-chip vector memory per core
 
 FLOPS_PER_CYCLE = PEAK_FLOPS_BF16 / CLOCK_HZ      # ~209574
 HBM_BYTES_PER_CYCLE = HBM_BW / CLOCK_HZ           # ~871
@@ -92,10 +91,48 @@ def _conv_flops(eqn) -> int:
     return 2 * out_elems * k
 
 
+def _pallas_grid_steps(eqn) -> int:
+    gm = eqn.params.get("grid_mapping")
+    grid = getattr(gm, "grid", ()) or ()
+    steps = 1
+    for g in grid:
+        try:
+            steps *= int(g)
+        except (TypeError, ValueError):     # dynamic grid dim: count once
+            pass
+    return max(steps, 1)
+
+
+def _pallas_cost(eqn) -> EqnCost:
+    """Cost of a ``pallas_call``: per-grid-step kernel-body cycles (the
+    body jaxpr's avals are BLOCK-shaped, so tile/pipeline choices change
+    this) times the grid size, plus the per-step HBM<->VMEM block DMA.
+    This is what makes probed cycle counts sensitive to kernel configs —
+    the signal the DSE engine tunes against."""
+    body = _as_jaxpr(eqn.params["jaxpr"])
+    steps = _pallas_grid_steps(eqn)
+    body_cycles = static_jaxpr_cycles(body)
+    flops, bytes_ = jaxpr_flat_flops_bytes(body)
+    # block DMA per grid step: every kernel operand ref (input blocks,
+    # output blocks, scratch) is VMEM-resident; HBM-backed blocks move
+    # across the memory system once per step
+    block_bytes = sum(_aval_bytes(v.aval) for v in body.invars)
+    dma_cycles = int(math.ceil(block_bytes / HBM_BYTES_PER_CYCLE))
+    cycles = steps * max(1, body_cycles + dma_cycles)
+    return EqnCost(flops=steps * flops,
+                   bytes=steps * (bytes_ + block_bytes),
+                   comm_bytes=0, cycles=cycles)
+
+
 def eqn_cost(eqn) -> EqnCost:
     """Flat cost of one first-order equation (control flow handled by
     the interpreters, which recurse)."""
     name = eqn.primitive.name
+    if name == "pallas_call":
+        try:
+            return _pallas_cost(eqn)
+        except (KeyError, AttributeError, TypeError):
+            pass          # unknown pallas param layout: generic fallback
     in_bytes = sum(_aval_bytes(v.aval) for v in eqn.invars
                    if hasattr(v, "aval"))
     out_bytes = sum(_aval_bytes(v.aval) for v in eqn.outvars)
@@ -182,6 +219,114 @@ def static_eqn_cycles(eqn) -> int:
 
 def static_jaxpr_cycles(jaxpr) -> int:
     return sum(static_eqn_cycles(e) for e in jaxpr.eqns)
+
+
+def jaxpr_flat_flops_bytes(jaxpr) -> "Tuple[int, int]":
+    """(flops, bytes) for one execution of a jaxpr, recursing into
+    control flow like ``static_eqn_cycles`` (scan x trip count, cond as
+    the widest branch, while as a single iteration)."""
+    flops = bytes_ = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            f, b = jaxpr_flat_flops_bytes(_as_jaxpr(eqn.params["jaxpr"]))
+            n = int(eqn.params["length"])
+            flops += f * n
+            bytes_ += b * n
+        elif name == "while":
+            f, b = jaxpr_flat_flops_bytes(_as_jaxpr(eqn.params["body_jaxpr"]))
+            flops += f
+            bytes_ += b
+        elif name == "cond":
+            branch = [jaxpr_flat_flops_bytes(_as_jaxpr(br))
+                      for br in eqn.params["branches"]]
+            flops += max(f for f, _ in branch)
+            bytes_ += max(b for _, b in branch)
+        elif name in _SUBJAXPR_PRIMS:
+            subs = list(_sub_jaxprs(eqn))
+            if subs:
+                f, b = jaxpr_flat_flops_bytes(_as_jaxpr(subs[0]))
+                flops += f
+                bytes_ += b
+        else:
+            c = eqn_cost(eqn)
+            flops += c.flops
+            bytes_ += c.bytes
+    return flops, bytes_
+
+
+# ------------------------------------------- kernel resource footprints
+
+@dataclass(frozen=True)
+class KernelResources:
+    """Static footprint of one candidate kernel configuration — the
+    analogue of the paper's post-synthesis LUT/FF/BRAM report."""
+    vmem_bytes: int           # per-grid-step working set (double-buffered)
+    hbm_bytes: int            # modeled total memory traffic
+    flops: int
+    grid_steps: int
+    static_cycles: int        # cost-model cycle estimate for the call
+
+
+@dataclass(frozen=True)
+class DeviceBudget:
+    """Hard per-candidate resource ceilings (LUT/FF/BRAM analogue:
+    VMEM bytes, HBM traffic, FLOPs). ``None`` disables a ceiling."""
+    vmem_bytes: Optional[int] = VMEM_BYTES
+    hbm_bytes: Optional[int] = None
+    flops: Optional[int] = None
+
+    def violations(self, r: KernelResources) -> Tuple[str, ...]:
+        out = []
+        if self.vmem_bytes is not None and r.vmem_bytes > self.vmem_bytes:
+            out.append(f"vmem {r.vmem_bytes}B > {self.vmem_bytes}B")
+        if self.hbm_bytes is not None and r.hbm_bytes > self.hbm_bytes:
+            out.append(f"hbm {r.hbm_bytes}B > {self.hbm_bytes}B")
+        if self.flops is not None and r.flops > self.flops:
+            out.append(f"flops {r.flops} > {self.flops}")
+        return tuple(out)
+
+    def fits(self, r: KernelResources) -> bool:
+        return not self.violations(r)
+
+
+def _walk_pallas_eqns(jaxpr):
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            yield eqn
+        for sub in _sub_jaxprs(eqn):
+            yield from _walk_pallas_eqns(_as_jaxpr(sub))
+
+
+def _ref_vmem_bytes(aval) -> int:
+    """VMEM working-set contribution of one kernel operand ref: HBM-
+    backed blocks (memory space unset) are double-buffered by the
+    HBM->VMEM pipeline; explicit VMEM scratch is single-buffered."""
+    single = getattr(aval, "memory_space", None) is not None
+    return (1 if single else 2) * _aval_bytes(aval)
+
+
+def jaxpr_kernel_resources(jaxpr) -> KernelResources:
+    """Aggregate Pallas-kernel footprint of a traced program: VMEM is
+    the max per-grid-step working set over all ``pallas_call``s (input/
+    output blocks double-buffered for the HBM->VMEM pipeline, scratch
+    single-buffered), traffic/FLOPs/cycles summed."""
+    vmem = hbm = flops = steps = cycles = 0
+    for eqn in _walk_pallas_eqns(jaxpr):
+        try:
+            body = _as_jaxpr(eqn.params["jaxpr"])
+            n = _pallas_grid_steps(eqn)
+            block = sum(_ref_vmem_bytes(v.aval) for v in body.invars)
+            c = _pallas_cost(eqn)
+        except (KeyError, AttributeError, TypeError):
+            continue      # unknown pallas param layout (see eqn_cost)
+        vmem = max(vmem, block)
+        hbm += c.bytes
+        flops += c.flops
+        steps += n
+        cycles += c.cycles
+    return KernelResources(vmem_bytes=vmem, hbm_bytes=hbm, flops=flops,
+                           grid_steps=steps, static_cycles=cycles)
 
 
 def jaxpr_has_dynamic_cycles(jaxpr) -> bool:

@@ -1,8 +1,10 @@
 """Automated design-space exploration (paper §IV-E, Fig 13).
 
-Explores profiling configurations — storage class (register-like shallow
-rings, BRAM-like deep rings, hybrid) x DRAM dump ratio (0/25/50/75%) —
-and scores each on the paper's three metrics:
+Two DSE loops live here:
+
+**run_dse** explores profiling configurations — storage class
+(register-like shallow rings, BRAM-like deep rings, hybrid) x DRAM dump
+ratio (0/25/50/75%) — and scores each on the paper's three metrics:
 
   1) resource overhead      on-device state bytes + extra HLO equations
                             (weighted, relative to the base program),
@@ -10,24 +12,44 @@ and scores each on the paper's three metrics:
   3) latency impact         measured wall-time of the instrumented step
                             relative to the unprobed step (Fmax analogue).
 
-Returns all points plus the Pareto-optimal subset. Incremental
+It returns all points plus the Pareto-optimal subset. Incremental
 re-instrumentation (cached trace/hierarchy) is what makes the sweep
 cheap — each point only rebuilds the probe layer, like the paper's
 incremental synthesis.
+
+**DSEEngine** closes the paper's second loop: probe telemetry driving
+*kernel-configuration* search under device resource budgets. Given a
+:class:`SearchSpace` (tile sizes / pipeline depth per Pallas kernel) it
+
+  1) enumerates candidate configs,
+  2) prunes statically with the cost model against a
+     :class:`~repro.core.costmodel.DeviceBudget` (VMEM bytes, HBM
+     traffic, FLOPs — the LUT/FF/BRAM-constraint analogue),
+  3) measures survivors with ``ProbeSession`` cycle telemetry under
+     successive halving (cheap configs get few steps, finalists many),
+  4) memoizes every measurement in the on-disk
+     :class:`~repro.core.incremental.EvalCache` keyed by (kernel id,
+     config, lowered-IR hash, device kind) — re-running after an
+     unrelated edit re-measures nothing.
 """
 from __future__ import annotations
 
+import itertools
+import math
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
 from repro.core.buffer import state_bytes
-from repro.core.costmodel import CLOCK_HZ
+from repro.core.costmodel import (CLOCK_HZ, DeviceBudget, KernelResources,
+                                  jaxpr_kernel_resources)
 from repro.core.counters import c64_to_int
-from repro.core.pragma import ProbeConfig, ProbedFunction, probe
+from repro.core.incremental import (EvalCache, device_kind,
+                                    fingerprint_closed)
+from repro.core.pragma import ProbeConfig, probe
 
 STORAGE_DEPTH = {"registers": 4, "hybrid": 16, "bram": 64}
 
@@ -133,3 +155,272 @@ def run_dse(fn: Callable, args: Sequence[Any],
     pareto = [p for p in points
               if not any(o.dominates(p) for o in points)]
     return DSEResult(points=points, pareto=pareto)
+
+
+# ===================================================================
+# Kernel-configuration autotuning (probe-guided, budget-constrained)
+# ===================================================================
+
+@dataclass
+class SearchSpace:
+    """Declarative candidate space for one kernel.
+
+    ``axes`` maps axis name -> allowed values; candidates are the
+    cartesian product filtered through ``is_valid``. ``bind(config)``
+    returns a callable taking ``args`` (example inputs at the shapes
+    being tuned) that executes the kernel under that config.
+    ``default`` is the untuned baseline the leaderboard compares
+    against.
+    """
+    kernel_id: str
+    axes: Dict[str, Tuple[Any, ...]]
+    bind: Callable[[Dict[str, Any]], Callable]
+    args: Tuple[Any, ...]
+    default: Dict[str, Any]
+    is_valid: Optional[Callable[[Dict[str, Any]], bool]] = None
+
+    def candidates(self) -> List[Dict[str, Any]]:
+        names = sorted(self.axes)
+        out = []
+        for combo in itertools.product(*(self.axes[n] for n in names)):
+            cfg = dict(zip(names, combo))
+            if self.is_valid is None or self.is_valid(cfg):
+                out.append(cfg)
+        return out
+
+
+@dataclass
+class Trial:
+    """One candidate's journey through the engine."""
+    config: Dict[str, Any]
+    resources: Optional[KernelResources] = None
+    fingerprint: str = ""
+    pruned: Optional[str] = None          # reason, when statically rejected
+    cycles_per_step: Optional[float] = None
+    steps: int = 0                        # largest rung this trial ran at
+    cache_hits: int = 0
+    measurements: int = 0
+    is_default: bool = False
+
+    @property
+    def measured(self) -> bool:
+        return self.cycles_per_step is not None
+
+
+@dataclass
+class TuneResult:
+    kernel_id: str
+    trials: List[Trial]
+    best: Optional[Trial]
+    default: Optional[Trial]
+    n_candidates: int
+    n_pruned: int
+    n_measurements: int                   # ProbeSession runs performed
+    n_cache_hits: int
+    measured_steps: int                   # total steps across measurements
+    wall_s: float
+    device: str = ""
+
+    @property
+    def speedup(self) -> float:
+        """Default cycles/step over best cycles/step (>1 = tuned wins)."""
+        if (self.best is None or self.default is None
+                or not self.default.measured or not self.best.measured):
+            return 1.0
+        return self.default.cycles_per_step / max(self.best.cycles_per_step,
+                                                  1e-12)
+
+    def leaderboard(self, top: int = 10) -> str:
+        from repro.core import report as report_mod
+        return report_mod.dse_leaderboard(self, top=top)
+
+    def to_dict(self) -> Dict[str, Any]:
+        def trial(t: Optional[Trial]):
+            if t is None:
+                return None
+            return {"config": t.config, "pruned": t.pruned,
+                    "cycles_per_step": t.cycles_per_step, "steps": t.steps,
+                    "cache_hits": t.cache_hits,
+                    "measurements": t.measurements,
+                    "is_default": t.is_default}
+        return {
+            "kernel": self.kernel_id, "device": self.device,
+            "n_candidates": self.n_candidates, "n_pruned": self.n_pruned,
+            "n_measurements": self.n_measurements,
+            "n_cache_hits": self.n_cache_hits,
+            "measured_steps": self.measured_steps,
+            "speedup": round(self.speedup, 4),
+            "best": trial(self.best), "default": trial(self.default),
+            "trials": [trial(t) for t in self.trials],
+        }
+
+
+class DSEEngine:
+    """Probe-guided autotuner for Pallas kernel configurations.
+
+    ``tune()`` runs enumerate -> static-prune -> successive-halving
+    measurement -> cache, and returns a :class:`TuneResult`. The
+    baseline (``space.default``) is always measured alongside the
+    survivors so the leaderboard's speedup is honest.
+
+    Successive halving: every surviving candidate runs ``r0`` probed
+    steps; the best ``1/eta`` fraction advances with ``eta``x the steps,
+    until one remains or ``max_steps`` is reached. All measurements go
+    through the :class:`EvalCache`, so a warm re-run performs zero new
+    measurements.
+    """
+
+    def __init__(self, space: SearchSpace, *,
+                 budget: Optional[DeviceBudget] = DeviceBudget(),
+                 cache: Optional[EvalCache] = None,
+                 cache_dir: Optional[str] = None,
+                 cycle_source: str = "model",
+                 r0: int = 1, eta: int = 2, max_steps: int = 4,
+                 static_prune_ratio: Optional[float] = None):
+        if r0 < 1 or eta < 2 or max_steps < r0:
+            raise ValueError(f"bad halving schedule r0={r0} eta={eta} "
+                             f"max_steps={max_steps}")
+        self.space = space
+        self.budget = budget
+        self.cache = cache if cache is not None else EvalCache(cache_dir)
+        self.cycle_source = cycle_source
+        self.r0, self.eta, self.max_steps = r0, eta, max_steps
+        self.static_prune_ratio = static_prune_ratio
+        self.device = device_kind()
+        # run accounting (reset per tune())
+        self.n_measurements = 0
+        self.n_cache_hits = 0
+        self.measured_steps = 0
+
+    # -- stage 1+2: enumerate & statically analyze ----------------------
+    def analyze(self, config: Dict[str, Any]) -> Trial:
+        """Trace one candidate; attach its IR hash and the cost-model
+        resource footprint (no execution)."""
+        fn = self.space.bind(config)
+        closed = jax.make_jaxpr(fn)(*self.space.args)
+        fp = fingerprint_closed(closed)
+        res = jaxpr_kernel_resources(closed.jaxpr)
+        return Trial(config=dict(config), resources=res, fingerprint=fp)
+
+    def prune(self, trials: Sequence[Trial]) -> List[Trial]:
+        """Static rejection against the device budget; optionally also
+        drop candidates whose cost-model estimate exceeds
+        ``static_prune_ratio`` x the best static estimate. Hard budget
+        checks can never discard a config that actually fits the device,
+        so the measured-best always survives default pruning."""
+        alive = []
+        for t in trials:
+            if self.budget is not None and t.resources is not None:
+                v = self.budget.violations(t.resources)
+                if v:
+                    t.pruned = "; ".join(v)
+                    continue
+            alive.append(t)
+        if self.static_prune_ratio is not None and alive:
+            floor = min(t.resources.static_cycles for t in alive
+                        if t.resources is not None)
+            kept = []
+            for t in alive:
+                if (t.resources is not None and floor > 0 and
+                        t.resources.static_cycles >
+                        self.static_prune_ratio * floor):
+                    t.pruned = (f"static {t.resources.static_cycles} cyc > "
+                                f"{self.static_prune_ratio:g}x floor {floor}")
+                else:
+                    kept.append(t)
+            alive = kept
+        return alive
+
+    # -- stage 3: probed measurement ------------------------------------
+    def _measure(self, config: Dict[str, Any], steps: int) -> float:
+        """Run ``steps`` probed steps of the candidate under a
+        ``ProbeSession``; returns mean cycles/step from the session's
+        device span counter."""
+        from repro.core.streaming import ProbeSession
+        fn = self.space.bind(config)
+        cfg = ProbeConfig(targets=("",), max_probes=4, buffer_depth=2,
+                          cycle_source=self.cycle_source)
+        with ProbeSession(fn, cfg, window_steps=steps + 1) as s:
+            for _ in range(steps):
+                jax.block_until_ready(s.step(*self.space.args))
+            snap = s.snapshot()
+        self.n_measurements += 1
+        self.measured_steps += steps
+        return snap.span / max(steps, 1)
+
+    def evaluate(self, t: Trial, steps: int) -> float:
+        """Cache-through evaluation at a rung of ``steps`` steps."""
+        hit = self.cache.get(self.space.kernel_id, t.config, t.fingerprint,
+                             self.device, min_steps=steps)
+        if hit is not None:
+            t.cache_hits += 1
+            self.n_cache_hits += 1
+            t.cycles_per_step = float(hit["cycles_per_step"])
+            t.steps = max(t.steps, int(hit["steps"]))
+            return t.cycles_per_step
+        cps = self._measure(t.config, steps)
+        t.measurements += 1
+        t.cycles_per_step = cps
+        t.steps = steps
+        self.cache.put(self.space.kernel_id, t.config, t.fingerprint,
+                       self.device, cycles_per_step=cps, steps=steps)
+        return cps
+
+    def successive_halving(self, trials: List[Trial]) -> Optional[Trial]:
+        active = list(trials)
+        r = self.r0
+        while active:
+            for t in active:
+                self.evaluate(t, r)
+            active.sort(key=lambda t: t.cycles_per_step)
+            if len(active) == 1 or r >= self.max_steps:
+                return active[0]
+            keep = max(1, math.ceil(len(active) / self.eta))
+            active = active[:keep]
+            r = min(r * self.eta, self.max_steps)
+        return None
+
+    # -- the whole loop --------------------------------------------------
+    def tune(self) -> TuneResult:
+        self.n_measurements = self.n_cache_hits = self.measured_steps = 0
+        t0 = time.perf_counter()
+        configs = self.space.candidates()
+        trials = [self.analyze(c) for c in configs]
+        default_trial = None
+        for t in trials:
+            if t.config == self.space.default:
+                t.is_default = True
+                default_trial = t
+        survivors = self.prune(trials)
+        best = self.successive_halving(survivors)
+        # always measure the baseline (even if pruned / not in the space),
+        # at the SAME rung as the finalist — comparing a 1-step sample
+        # against a max_steps mean is meaningless under wallclock noise
+        if default_trial is None:
+            default_trial = self.analyze(self.space.default)
+            default_trial.is_default = True
+            trials.append(default_trial)
+        base_steps = best.steps if (best is not None and best.measured) \
+            else self.r0
+        if not default_trial.measured or default_trial.steps < base_steps:
+            self.evaluate(default_trial, base_steps)
+        if best is None or (default_trial.measured and best.measured and
+                            default_trial.cycles_per_step
+                            <= best.cycles_per_step):
+            best = default_trial
+        if best is not None and best.measured:
+            shape = str([(tuple(getattr(a, "shape", ())),
+                          str(getattr(a, "dtype", "?")))
+                         for a in jax.tree_util.tree_leaves(self.space.args)])
+            self.cache.set_winner(self.space.kernel_id, self.device,
+                                  best.config,
+                                  cycles_per_step=best.cycles_per_step,
+                                  shape=shape)
+        return TuneResult(
+            kernel_id=self.space.kernel_id, trials=trials, best=best,
+            default=default_trial, n_candidates=len(configs),
+            n_pruned=sum(1 for t in trials if t.pruned is not None),
+            n_measurements=self.n_measurements,
+            n_cache_hits=self.n_cache_hits,
+            measured_steps=self.measured_steps,
+            wall_s=time.perf_counter() - t0, device=self.device)

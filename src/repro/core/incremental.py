@@ -1,25 +1,33 @@
-"""Incremental re-instrumentation (paper §IV-C.2, Fig 7/11).
+"""Incremental re-instrumentation + evaluation caching (paper §IV-C.2).
 
 Vivado's incremental synthesis preserves 99% of cells when RealProbe
-retargets; the XLA analogue has two layers:
+retargets; the XLA analogue has three layers:
 
 1. the traced jaxpr + hierarchy are extracted ONCE per function/shape
    (``ProbedFunction.trace``) and reused verbatim across retargets;
 2. the *unprobed* model executable is compiled under its own jit cache
-   key and is never invalidated by probe changes (decoupling).
+   key and is never invalidated by probe changes (decoupling);
+3. DSE measurements persist in an on-disk :class:`EvalCache` keyed by
+   (kernel id, candidate config, lowered-IR hash, device kind), so
+   re-running the autotuner after an unrelated edit re-measures nothing
+   — and an edit to the kernel itself changes the IR hash and naturally
+   invalidates exactly the stale entries.
 
-``measure_incremental`` quantifies both — full cold setup vs retarget
-cost vs the untouched base executable — for bench_incremental (Fig 11).
+``measure_incremental`` quantifies the first two — full cold setup vs
+retarget cost vs the untouched base executable — for bench_incremental.
 """
 from __future__ import annotations
 
+import hashlib
+import json
+import os
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Sequence
+from typing import Any, Callable, Dict, Optional, Sequence
 
 import jax
 
-from repro.core.pragma import ProbeConfig, ProbedFunction, probe
+from repro.core.pragma import ProbeConfig, probe
 
 
 @dataclass
@@ -39,6 +47,174 @@ class IncrementalTimings:
                 f"({100 * self.retarget_total_s / max(self.cold_total_s, 1e-12):.1f}% of cold)\n"
                 f"base executable: {'reused (untouched)' if self.base_compile_reused else 'RECOMPILED'}\n"
                 f"artifact reuse : {self.reuse_fraction * 100:.1f}%")
+
+
+# --------------------------------------------------- evaluation cache
+
+DEFAULT_CACHE_DIR = os.path.join(".repro_cache", "dse")
+
+
+def fingerprint_closed(closed) -> str:
+    """Hash an already-traced closed jaxpr (the single definition of
+    the cache-key fingerprint scheme)."""
+    return hashlib.sha256(str(closed).encode()).hexdigest()[:16]
+
+
+def lowered_fingerprint(fn: Callable, args: Sequence[Any]) -> str:
+    """Content hash of the candidate's lowered IR (the traced jaxpr,
+    avals included). Any edit to the kernel body, the wrapper, or the
+    input shapes changes this hash; unrelated repo edits do not — the
+    cache-key analogue of hashing the post-synthesis checkpoint."""
+    return fingerprint_closed(jax.make_jaxpr(fn)(*args))
+
+
+def device_kind() -> str:
+    d = jax.devices()[0]
+    return f"{d.platform}:{getattr(d, 'device_kind', '?')}"
+
+
+class EvalCache:
+    """On-disk memo of DSE measurements (the incremental-synthesis
+    analogue: unchanged candidates are never re-measured).
+
+    One JSON file maps entry keys — sha256 over (kernel id, canonical
+    config, lowered-IR hash, device kind) — to the best measurement so
+    far: ``{config, cycles_per_step, steps, ...}``. A lookup hits only
+    when the cached run covered at least as many steps as requested, so
+    successive-halving finalists are always backed by long-enough runs.
+    """
+
+    def __init__(self, cache_dir: Optional[str] = None):
+        root = (cache_dir or os.environ.get("REPRO_DSE_CACHE")
+                or DEFAULT_CACHE_DIR)
+        self.root = os.path.expanduser(root)
+        self.path = os.path.join(self.root, "evals.json")
+        self.winners_path = os.path.join(self.root, "winners.json")
+        self._data: Optional[Dict[str, Dict[str, Any]]] = None
+        self._winners: Optional[Dict[str, Dict[str, Any]]] = None
+
+    # -- storage -------------------------------------------------------
+    def _load(self) -> Dict[str, Dict[str, Any]]:
+        if self._data is None:
+            try:
+                with open(self.path) as f:
+                    self._data = json.load(f)
+            except (OSError, ValueError):
+                self._data = {}
+        return self._data
+
+    def _save(self) -> None:
+        os.makedirs(self.root, exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self._load(), f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
+
+    @staticmethod
+    def entry_key(kernel_id: str, config: Dict[str, Any],
+                  fingerprint: str, device: str) -> str:
+        blob = json.dumps([kernel_id, config, fingerprint, device],
+                          sort_keys=True)
+        return hashlib.sha256(blob.encode()).hexdigest()[:24]
+
+    # -- API -----------------------------------------------------------
+    def get(self, kernel_id: str, config: Dict[str, Any], fingerprint: str,
+            device: str, min_steps: int = 1) -> Optional[Dict[str, Any]]:
+        e = self._load().get(self.entry_key(kernel_id, config, fingerprint,
+                                            device))
+        if e is not None and e["steps"] >= min_steps:
+            return e
+        return None
+
+    def put(self, kernel_id: str, config: Dict[str, Any], fingerprint: str,
+            device: str, *, cycles_per_step: float, steps: int) -> None:
+        data = self._load()
+        data[self.entry_key(kernel_id, config, fingerprint, device)] = {
+            "kernel": kernel_id, "config": dict(config),
+            "fingerprint": fingerprint, "device": device,
+            "cycles_per_step": float(cycles_per_step), "steps": int(steps),
+        }
+        self._save()
+
+    def entries(self, kernel_id: Optional[str] = None,
+                device: Optional[str] = None) -> list:
+        out = []
+        for e in self._load().values():
+            if kernel_id is not None and e.get("kernel") != kernel_id:
+                continue
+            if device is not None and e.get("device") != device:
+                continue
+            out.append(dict(e))
+        return out
+
+    # -- winners (the DSE outcome record) -------------------------------
+    def _load_winners(self) -> Dict[str, Dict[str, Any]]:
+        if self._winners is None:
+            try:
+                with open(self.winners_path) as f:
+                    self._winners = json.load(f)
+            except (OSError, ValueError):
+                self._winners = {}
+        return self._winners
+
+    def set_winner(self, kernel_id: str, device: str,
+                   config: Dict[str, Any], *, cycles_per_step: float,
+                   shape: str = "") -> None:
+        """Record the outcome of the LATEST tuning run for this kernel
+        on this device. Raw eval entries are not mutually comparable —
+        cycles scale with problem shape and stale-fingerprint entries
+        survive kernel edits — so the engine declares its winner
+        explicitly and ``best_config`` serves that."""
+        w = self._load_winners()
+        w[f"{kernel_id}@{device}"] = {
+            "kernel": kernel_id, "device": device, "config": dict(config),
+            "cycles_per_step": float(cycles_per_step), "shape": shape,
+        }
+        os.makedirs(self.root, exist_ok=True)
+        tmp = self.winners_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(w, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.winners_path)
+
+    def best_config(self, kernel_id: str,
+                    device: Optional[str] = None) -> Optional[Dict[str, Any]]:
+        """Config chosen by the most recent tuning run for this kernel
+        on this device (falls back, for hand-written caches with no
+        winner record, to the raw lowest-cycles eval entry)."""
+        dev = device if device is not None else device_kind()
+        w = self._load_winners().get(f"{kernel_id}@{dev}")
+        if w is not None:
+            return dict(w["config"])
+        es = self.entries(kernel_id, dev)
+        if not es:
+            return None
+        best = min(es, key=lambda e: (e["cycles_per_step"], -e["steps"]))
+        return dict(best["config"])
+
+    def clear(self, kernel_id: Optional[str] = None) -> int:
+        data = self._load()
+        if kernel_id is None:
+            n = len(data)
+            data.clear()
+        else:
+            drop = [k for k, e in data.items()
+                    if e.get("kernel") == kernel_id]
+            n = len(drop)
+            for k in drop:
+                del data[k]
+        self._save()
+        w = self._load_winners()
+        for k in [k for k, e in w.items()
+                  if kernel_id is None or e.get("kernel") == kernel_id]:
+            del w[k]
+        if os.path.exists(self.winners_path) or w:
+            os.makedirs(self.root, exist_ok=True)
+            with open(self.winners_path, "w") as f:
+                json.dump(w, f, indent=1, sort_keys=True)
+        return n
+
+    def __len__(self) -> int:
+        return len(self._load())
 
 
 def measure_incremental(fn: Callable, args: Sequence[Any],

@@ -12,7 +12,7 @@ scope too small to be worth a probe (XLA will fuse it away):
 """
 from __future__ import annotations
 
-from typing import List, Set, Tuple
+from typing import List, Tuple
 
 from repro.core.hierarchy import Hierarchy, ScopeNode
 

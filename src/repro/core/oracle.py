@@ -16,7 +16,6 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
-import jax
 import numpy as np
 from jax.extend import core
 from jax._src.core import eval_jaxpr as _eval_jaxpr

@@ -18,10 +18,9 @@ from __future__ import annotations
 import dataclasses
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
-import numpy as np
 
 from repro.core import inline as inline_mod
 from repro.core.buffer import HostSink, state_bytes

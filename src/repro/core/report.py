@@ -11,7 +11,7 @@ host sink, and renders:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -182,6 +182,48 @@ def streaming_bump_chart(snapshot, top: int = 5, width: int = 18) -> str:
         rankings[wdw.label] = [snapshot.paths[i] for i in order
                                if wdw.totals[i] > 0]
     return bump_chart(rankings, width=width)
+
+
+def dse_leaderboard(result, top: int = 10) -> str:
+    """Ranked table for a ``dse.TuneResult``: measured candidates by
+    probed cycles/step (speedup vs the untuned default), then the
+    statically pruned ones with their rejection reason."""
+    def cfg_s(cfg):
+        return ",".join(f"{k}={v}" for k, v in sorted(cfg.items()))
+
+    measured = sorted((t for t in result.trials if t.measured),
+                      key=lambda t: t.cycles_per_step)
+    pruned = [t for t in result.trials if t.pruned is not None]
+    base = (result.default.cycles_per_step
+            if result.default is not None and result.default.measured
+            else None)
+    w = max([len(cfg_s(t.config)) for t in result.trials] + [6]) + 2
+    lines = [f"# DSE leaderboard: {result.kernel_id} on {result.device} — "
+             f"{result.n_candidates} candidates, {result.n_pruned} pruned, "
+             f"{result.n_measurements} measured "
+             f"({result.measured_steps} probed steps), "
+             f"{result.n_cache_hits} cache hits",
+             f"{'config':<{w}}{'cyc/step':>12}{'steps':>7}{'speedup':>9}"
+             f"{'vmem_B':>9}  flags"]
+    for rank, t in enumerate(measured[:top]):
+        su = f"{base / t.cycles_per_step:8.2f}x" if base else f"{'-':>9}"
+        flags = []
+        if result.best is t:
+            flags.append("BEST")
+        if t.is_default:
+            flags.append("default")
+        if t.cache_hits:
+            flags.append("cached")
+        lines.append(
+            f"{cfg_s(t.config):<{w}}{t.cycles_per_step:>12.1f}"
+            f"{t.steps:>7}{su}"
+            f"{t.resources.vmem_bytes if t.resources else 0:>9}"
+            f"  {' '.join(flags)}")
+    for t in pruned[:top]:
+        lines.append(f"{cfg_s(t.config):<{w}}{'pruned':>12}{'':>7}{'':>9}"
+                     f"{t.resources.vmem_bytes if t.resources else 0:>9}"
+                     f"  [{t.pruned}]")
+    return "\n".join(lines)
 
 
 def bump_chart(rankings: Dict[str, List[str]], width: int = 18) -> str:

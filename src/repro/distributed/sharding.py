@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import contextlib
 import contextvars
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -21,14 +21,13 @@ Features:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.configs.base import ShapeConfig, TrainConfig
 from repro.models.model import Model
 from repro.optim import adamw, compression
 from repro.optim.schedule import make_schedule

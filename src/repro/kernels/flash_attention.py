@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,13 +40,14 @@ def _compiler_params(interpret: bool):
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, probe_ref,
                   acc_ref, m_ref, l_ref,
-                  *, block_q: int, block_k: int, causal: bool,
+                  *, block_q: int, block_k: int, pipeline: int, causal: bool,
                   sm_scale: float, with_probe: bool):
     iq = pl.program_id(2)
-    ik = pl.program_id(3)
-    nk = pl.num_programs(3)
+    ig = pl.program_id(3)            # kv DMA-group index (pipeline blocks)
+    ng = pl.num_programs(3)
+    nk = ng * pipeline               # total kv blocks
 
-    @pl.when(ik == 0)
+    @pl.when(ig == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
@@ -55,44 +55,56 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, probe_ref,
         if with_probe:
             probe_ref[...] = jnp.zeros_like(probe_ref)
 
-    should_compute = (iq * block_q >= ik * block_k) if causal else True
+    # each grid step fetches `pipeline` kv blocks in one DMA group and
+    # runs the MXU tiles over them back to back (statically unrolled)
+    for p in range(pipeline):
+        ik = ig * pipeline + p
+        # causal skip decided by the q block's LAST row: any kv block
+        # starting at or before it intersects the causal triangle
+        should_compute = ((iq + 1) * block_q - 1 >= ik * block_k) \
+            if causal else True
 
-    if with_probe:
-        # control-event counters: [0]=blocks visited, [1]=blocks computed
-        probe_ref[0, 0, 0, 0] += 1
-        probe_ref[0, 0, 0, 1] += jnp.where(should_compute, 1, 0).astype(
-            probe_ref.dtype)
+        if with_probe:
+            # control-event counters: [0]=blocks visited, [1]=blocks computed
+            probe_ref[0, 0, 0, 0] += 1
+            probe_ref[0, 0, 0, 1] += jnp.where(should_compute, 1, 0).astype(
+                probe_ref.dtype)
 
-    @pl.when(should_compute)
-    def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
-        k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * sm_scale  # (bq, bk)
-        if causal:
-            q_pos = iq * block_q + jax.lax.broadcasted_iota(
-                jnp.int32, (block_q, block_k), 0)
-            k_pos = ik * block_k + jax.lax.broadcasted_iota(
-                jnp.int32, (block_q, block_k), 1)
-            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, s.max(axis=-1))
-        m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
-        p = jnp.exp(s - m_safe[:, None])
-        corr = jnp.where(jnp.isneginf(m_prev), 0.0,
-                         jnp.exp(m_prev - m_safe))
-        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
-        v = v_ref[0, 0].astype(jnp.float32)            # (bk, D)
-        pv = jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
-        m_ref[...] = m_new
+        @pl.when(should_compute)
+        def _compute(p=p, ik=ik):
+            q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+            k = k_ref[0, 0, p * block_k:(p + 1) * block_k].astype(
+                jnp.float32)                               # (bk, D)
+            s = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * sm_scale  # (bq, bk)
+            if causal:
+                q_pos = iq * block_q + jax.lax.broadcasted_iota(
+                    jnp.int32, (block_q, block_k), 0)
+                k_pos = ik * block_k + jax.lax.broadcasted_iota(
+                    jnp.int32, (block_q, block_k), 1)
+                s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+            m_prev = m_ref[...]
+            m_new = jnp.maximum(m_prev, s.max(axis=-1))
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p_ = jnp.exp(s - m_safe[:, None])
+            corr = jnp.where(jnp.isneginf(m_prev), 0.0,
+                             jnp.exp(m_prev - m_safe))
+            l_ref[...] = l_ref[...] * corr + p_.sum(axis=-1)
+            v = v_ref[0, 0, p * block_k:(p + 1) * block_k].astype(
+                jnp.float32)                               # (bk, D)
+            pv = jax.lax.dot_general(
+                p_, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+            m_ref[...] = m_new
 
-    last_k = jnp.minimum(iq * block_q // block_k, nk - 1) if causal else nk - 1
+    # last group holding the causal diagonal of this q block — based on
+    # the block's LAST row (its first row under-counts when bq > bk)
+    last_g = (jnp.minimum(((iq + 1) * block_q - 1) // block_k, nk - 1)
+              // pipeline) if causal else ng - 1
 
-    @pl.when(ik == last_k)
+    @pl.when(ig == last_g)
     def _finalize():
         l = jnp.maximum(l_ref[...], 1e-37)
         o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
@@ -101,9 +113,14 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, probe_ref,
 def flash_attention(q, k, v, *, causal: bool = True,
                     block_q: int = DEFAULT_BLOCK_Q,
                     block_k: int = DEFAULT_BLOCK_K,
+                    pipeline: int = 1,
                     with_probe: bool = False,
                     interpret: bool = False):
     """q: (B, H, S, D); k, v: (B, Hkv, S, D), H % Hkv == 0.
+
+    ``pipeline`` is the kv software-pipelining depth: each grid step
+    DMAs ``pipeline`` consecutive kv blocks into VMEM and sweeps the
+    MXU tiles over them (fewer, larger transfers; same math).
 
     Returns (B, H, S, D) [, probe (B, H, nq, 2) int32 if with_probe].
     """
@@ -116,12 +133,18 @@ def flash_attention(q, k, v, *, causal: bool = True,
     block_k = min(block_k, S)
     if S % block_q or S % block_k:
         raise ValueError(f"S {S} not divisible by blocks ({block_q},{block_k})")
+    if pipeline < 1:
+        raise ValueError(f"pipeline {pipeline} < 1")
     nq, nk = S // block_q, S // block_k
+    if nk % pipeline:
+        raise ValueError(f"kv blocks {nk} not divisible by pipeline "
+                         f"{pipeline}")
+    ng = nk // pipeline
     sm_scale = 1.0 / math.sqrt(D)
 
     kernel = functools.partial(
-        _flash_kernel, block_q=block_q, block_k=block_k, causal=causal,
-        sm_scale=sm_scale, with_probe=with_probe)
+        _flash_kernel, block_q=block_q, block_k=block_k, pipeline=pipeline,
+        causal=causal, sm_scale=sm_scale, with_probe=with_probe)
 
     out_shape = [jax.ShapeDtypeStruct((B, H, S, D), q.dtype)]
     out_specs = [pl.BlockSpec((1, 1, block_q, D),
@@ -130,16 +153,16 @@ def flash_attention(q, k, v, *, causal: bool = True,
     out_specs.append(pl.BlockSpec((1, 1, 1, 2),
                                   lambda b, h, i, j: (b, h, i, 0)))
 
-    grid = (B, H, nq, nk)
+    grid = (B, H, nq, ng)
     res = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, block_q, D),
                          lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, block_k, D),
+            pl.BlockSpec((1, 1, block_k * pipeline, D),
                          lambda b, h, i, j: (b, h // qpk, j, 0)),
-            pl.BlockSpec((1, 1, block_k, D),
+            pl.BlockSpec((1, 1, block_k * pipeline, D),
                          lambda b, h, i, j: (b, h // qpk, j, 0)),
         ],
         out_specs=out_specs,

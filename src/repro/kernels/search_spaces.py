@@ -1,0 +1,103 @@
+"""Declarative DSE search spaces for the Pallas kernels.
+
+Each factory builds a ``repro.core.dse.SearchSpace`` over the kernel's
+tunable axes — MXU tile sizes and the software-pipelining depth — at a
+concrete problem shape (tuning is shape-specific, like the paper's
+per-design DSE). The ``bind`` closures call the raw kernels (not the
+jitted ``ops`` wrappers) so the traced jaxpr exposes the ``pallas_call``
+directly to the cost model and the probe instrumenter.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels.ops import _interpret_default as _interpret
+
+
+def flash_attention_space(*, B: int = 1, H: int = 2, S: int = 256,
+                          D: int = 64, Hkv: int | None = None,
+                          causal: bool = True,
+                          dtype=jnp.float32,
+                          blocks_q: Tuple[int, ...] = (64, 128, 256),
+                          blocks_k: Tuple[int, ...] = (64, 128, 256),
+                          pipelines: Tuple[int, ...] = (1, 2),
+                          seed: int = 0):
+    """Block/tile x pipeline space for the causal GQA flash kernel."""
+    from repro.core.dse import SearchSpace
+    Hkv = Hkv or H
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k0, (B, H, S, D)).astype(dtype)
+    k = jax.random.normal(k1, (B, Hkv, S, D)).astype(dtype)
+    v = jax.random.normal(k2, (B, Hkv, S, D)).astype(dtype)
+
+    def is_valid(cfg):
+        bq, bk, pp = cfg["block_q"], cfg["block_k"], cfg["pipeline"]
+        return (bq <= S and bk <= S and S % bq == 0 and S % bk == 0
+                and (S // bk) % pp == 0)
+
+    def bind(cfg):
+        bq, bk, pp = cfg["block_q"], cfg["block_k"], cfg["pipeline"]
+        interp = _interpret()
+
+        def fn(q, k, v):
+            with jax.named_scope("flash_attention"):
+                return _fa.flash_attention(
+                    q, k, v, causal=causal, block_q=bq, block_k=bk,
+                    pipeline=pp, interpret=interp)
+        return fn
+
+    return SearchSpace(
+        kernel_id="flash_attention",
+        axes={"block_q": blocks_q, "block_k": blocks_k,
+              "pipeline": pipelines},
+        bind=bind, args=(q, k, v),
+        default={"block_q": min(_fa.DEFAULT_BLOCK_Q, S),
+                 "block_k": min(_fa.DEFAULT_BLOCK_K, S), "pipeline": 1},
+        is_valid=is_valid)
+
+
+def ssd_scan_space(*, B: int = 1, H: int = 4, G: int = 2, L: int = 256,
+                   P: int = 16, N: int = 32,
+                   chunks: Tuple[int, ...] = (32, 64, 128, 256),
+                   pipelines: Tuple[int, ...] = (1, 2, 4),
+                   seed: int = 0):
+    """Chunk x sub-chunk-pipeline space for the Mamba-2 SSD scan."""
+    from repro.core.dse import SearchSpace
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (B, H, L, P)) * 0.5
+    a = -jnp.abs(jax.random.normal(ks[1], (B, H, L))) * 0.3
+    b = jax.random.normal(ks[2], (B, G, L, N)) * 0.5
+    c = jax.random.normal(ks[3], (B, G, L, N)) * 0.5
+
+    def is_valid(cfg):
+        ch, pp = cfg["chunk"], cfg["pipeline"]
+        return (ch <= L and L % ch == 0 and ch % pp == 0
+                and ch // pp >= 8)
+
+    def bind(cfg):
+        ch, pp = cfg["chunk"], cfg["pipeline"]
+        interp = _interpret()
+
+        def fn(x, a, b, c):
+            with jax.named_scope("ssd_scan"):
+                return _ssd.ssd_scan(x, a, b, c, chunk=ch, pipeline=pp,
+                                     interpret=interp)
+        return fn
+
+    return SearchSpace(
+        kernel_id="ssd_scan",
+        axes={"chunk": chunks, "pipeline": pipelines},
+        bind=bind, args=(x, a, b, c),
+        default={"chunk": min(256, L), "pipeline": 1},
+        is_valid=is_valid)
+
+
+SPACES = {
+    "flash_attention": flash_attention_space,
+    "ssd_scan": ssd_scan_space,
+}

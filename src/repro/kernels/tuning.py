@@ -1,0 +1,69 @@
+"""Tuned kernel defaults — the bridge from DSE results to production.
+
+The autotuner (``repro.core.dse.DSEEngine`` / the ``repro.tune`` CLI)
+persists winning configs in the on-disk evaluation cache; this module
+holds the process-wide "active" tuned configs that the ``ops`` wrappers
+consult when the caller does not pin a value explicitly:
+
+    from repro.kernels import tuning
+    tuning.load_cache("flash_attention")     # or serve.py --autotune
+    kops.flash_attention(q, k, v)            # uses the tuned blocks
+
+Explicit keyword arguments always win over tuned defaults, and tuned
+defaults win over the static module defaults — mirroring how RealProbe's
+DSE feeds resource reallocations back into the next synthesis run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+# kernel id -> {axis name: value}
+_TUNED: Dict[str, Dict[str, Any]] = {}
+
+KERNEL_IDS = ("flash_attention", "ssd_scan")
+
+
+def set_tuned(kernel_id: str, config: Dict[str, Any]) -> None:
+    """Install ``config`` as the tuned defaults for ``kernel_id``."""
+    _TUNED[kernel_id] = dict(config)
+
+
+def clear_tuned(kernel_id: Optional[str] = None) -> None:
+    if kernel_id is None:
+        _TUNED.clear()
+    else:
+        _TUNED.pop(kernel_id, None)
+
+
+def tuned(kernel_id: str) -> Dict[str, Any]:
+    return dict(_TUNED.get(kernel_id, {}))
+
+
+def tuned_value(kernel_id: str, axis: str, default):
+    """Resolve one axis: explicit caller value (pass it, not this) >
+    tuned default > static default."""
+    return _TUNED.get(kernel_id, {}).get(axis, default)
+
+
+def load_cache(kernel_id: Optional[str] = None, *,
+               cache_dir: Optional[str] = None,
+               verbose: bool = False) -> Dict[str, Dict[str, Any]]:
+    """Pull best cached configs into the registry. Returns what loaded
+    (kernel id -> config); kernels with no cache entries are left on
+    static defaults. ``verbose`` prints what happened (the --autotune
+    banner shared by serve.py / train.py)."""
+    from repro.core.incremental import EvalCache
+    cache = EvalCache(cache_dir)
+    loaded = {}
+    for kid in ([kernel_id] if kernel_id else KERNEL_IDS):
+        best = cache.best_config(kid)
+        if best is not None:
+            set_tuned(kid, best)
+            loaded[kid] = best
+    if verbose:
+        for kid, cfg in loaded.items():
+            print(f"[autotune] {kid}: {cfg}")
+        if not loaded:
+            print("[autotune] no cached configs — run `python -m "
+                  "repro.tune` first; using static defaults")
+    return loaded

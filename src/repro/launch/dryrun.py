@@ -24,15 +24,13 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import SHAPES, TrainConfig
-from repro.configs.registry import CONFIGS, get_config, supported_shapes
+from repro.configs.registry import CONFIGS, get_config
 from repro.distributed import sharding as shd
 from repro.distributed.steps import (build_decode_step, build_prefill_step,
                                      build_train_step)
-from repro.launch.collectives import parse_collective_bytes
 from repro.launch.hlo_cost import analyze as hlo_analyze
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import Model

@@ -16,10 +16,10 @@ from __future__ import annotations
 import argparse
 import json
 from pathlib import Path
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 from repro.configs.base import SHAPES
-from repro.configs.registry import CONFIGS, get_config
+from repro.configs.registry import get_config
 from repro.models.model import Model
 
 PEAK_FLOPS = 197e12
@@ -48,7 +48,6 @@ def active_param_count(arch: str) -> int:
 
 
 def model_flops(arch: str, shape_name: str) -> float:
-    cfg = get_config(arch)
     shape = SHAPES[shape_name]
     n = active_param_count(arch)
     if shape.kind == "train":

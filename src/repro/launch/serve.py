@@ -27,12 +27,14 @@ def serve(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
           batch: int = 4, prompt_len: int = 32, max_new: int = 16,
           cache_len: int = 128, profile: bool = False,
           profile_targets: Tuple[str, ...] = ("",),
-          profile_every: int = 8, profile_max_probes: int = 16):
+          profile_every: int = 8, profile_max_probes: int = 16,
+          autotune: bool = False, tune_cache: Optional[str] = None):
+    if autotune:
+        from repro.kernels import tuning
+        tuning.load_cache(cache_dir=tune_cache, verbose=True)
     cfg = smoke_config(arch) if smoke else get_config(arch)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    shape = ShapeConfig("serve", seq_len=cache_len, global_batch=batch,
-                        kind="decode")
     key = jax.random.PRNGKey(1)
 
     prefill = jax.jit(build_prefill_step(
@@ -106,11 +108,16 @@ def main():
     ap.add_argument("--profile-targets", default="",
                     help="comma-separated probe subtree roots")
     ap.add_argument("--profile-every", type=int, default=8)
+    ap.add_argument("--autotune", action="store_true",
+                    help="load DSE-tuned kernel configs from the eval cache")
+    ap.add_argument("--tune-cache", default=None,
+                    help="eval cache dir (default .repro_cache/dse)")
     args = ap.parse_args()
     toks = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                  max_new=args.max_new, profile=args.profile,
                  profile_targets=tuple(args.profile_targets.split(",")),
-                 profile_every=args.profile_every)
+                 profile_every=args.profile_every,
+                 autotune=args.autotune, tune_cache=args.tune_cache)
     print("sampled token ids (first sequence):", toks[0].tolist())
 
 

@@ -15,7 +15,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs.base import TrainConfig
@@ -32,7 +31,11 @@ def train(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
           mesh_shape=None, probe_targets: Optional[tuple] = None,
           checkpoint_dir: Optional[str] = None, resume: bool = False,
           tcfg: Optional[TrainConfig] = None, log_every: int = 10,
-          probe_every: int = 0):
+          probe_every: int = 0, autotune: bool = False,
+          tune_cache: Optional[str] = None):
+    if autotune:
+        from repro.kernels import tuning
+        tuning.load_cache(cache_dir=tune_cache, verbose=True)
     cfg = smoke_config(arch) if smoke else get_config(arch)
     model = Model(cfg)
     tcfg = tcfg or TrainConfig(total_steps=steps, warmup_steps=max(steps // 10, 1),
@@ -136,13 +139,18 @@ def main():
                     help="comma-separated probe subtree roots")
     ap.add_argument("--probe-every", type=int, default=0,
                     help="snapshot period in steps (default: log-every)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="load DSE-tuned kernel configs from the eval cache")
+    ap.add_argument("--tune-cache", default=None,
+                    help="eval cache dir (default .repro_cache/dse)")
     args = ap.parse_args()
     train(args.arch, smoke=not args.full, steps=args.steps,
           batch=args.batch, seq=args.seq,
           probe_targets=(tuple(args.probe_targets.split(","))
                          if args.probe else None),
           probe_every=args.probe_every,
-          checkpoint_dir=args.checkpoint_dir, resume=args.resume)
+          checkpoint_dir=args.checkpoint_dir, resume=args.resume,
+          autotune=args.autotune, tune_cache=args.tune_cache)
 
 
 if __name__ == "__main__":

@@ -8,7 +8,7 @@ logical sharding axes).
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -18,8 +18,7 @@ from repro.distributed.sharding import shard
 from repro.models import transformer as tfm
 from repro.models import ssm as ssm_mod
 from repro.models.frontends import frontend_input_specs
-from repro.models.layers import (Param, abstract, axes_tree, materialize,
-                                 rmsnorm)
+from repro.models.layers import Param, abstract, axes_tree, materialize
 
 Z_LOSS_WEIGHT = 1e-4
 

@@ -14,12 +14,12 @@ Layout:
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig, SSMConfig
+from repro.configs.base import ModelConfig
 from repro.distributed.sharding import shard
 from repro.models.layers import Param, rmsnorm
 
@@ -165,7 +165,11 @@ def ssm_apply(params, x, cfg: ModelConfig, *, use_kernel: bool = False,
         a_disc = (dt * a).astype(jnp.float32)                    # (B,S,h)
         x_disc = xs * dt[..., None].astype(xs.dtype)
     with jax.named_scope("ssd"):
-        chunk = min(d["chunk"], S)
+        if use_kernel:
+            from repro.kernels import ops as kops
+            chunk = kops.resolve_ssd_chunk(S, d["chunk"])
+        else:
+            chunk = min(d["chunk"], S)
         pad = (-S) % chunk
         if pad:
             # zero-pad: a=0 (decay 1) with x=0 leaves state/output intact
@@ -194,7 +198,6 @@ def ssm_apply(params, x, cfg: ModelConfig, *, use_kernel: bool = False,
     if return_state:
         K = d["conv_kernel"]
         conv_state = xbc_raw[:, S - (K - 1):, :]                 # (B,K-1,C)
-        e = h // g
         ssd_state = final_state.reshape(B, h, d["head_dim"], n)  # (B,h,p,n)
         return out, conv_state, ssd_state
     return out

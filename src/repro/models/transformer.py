@@ -8,8 +8,7 @@ paper's loop capture).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -19,8 +18,8 @@ from repro.distributed.sharding import shard
 from repro.models import attention as attn
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
-from repro.models.layers import (Param, map_schema, mlp_apply, mlp_schema,
-                                 rmsnorm, rmsnorm_schema, stack_schema)
+from repro.models.layers import (mlp_apply, mlp_schema, rmsnorm,
+                                 rmsnorm_schema, stack_schema)
 
 
 # ------------------------------------------------------------- schemas

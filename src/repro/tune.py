@@ -1,0 +1,10 @@
+"""``python -m repro.tune`` — entry point shim for the autotuning CLI.
+
+The implementation lives in :mod:`repro.launch.tune`.
+"""
+import sys
+
+from repro.launch.tune import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,5 @@
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 # NOTE: no XLA_FLAGS here — smoke tests see the real (1-device) backend.

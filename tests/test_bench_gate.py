@@ -1,0 +1,113 @@
+"""benchmarks/check_regression.py — the CI benchmark-regression gate."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.check_regression import compare, main, parse_derived  # noqa: E402
+
+
+def write_art(dirpath, bench, rows):
+    os.makedirs(dirpath, exist_ok=True)
+    art = {"bench": bench, "title": bench, "seed": 0, "rows": rows,
+           "error": None}
+    with open(os.path.join(dirpath, f"BENCH_{bench}.json"), "w") as f:
+        json.dump(art, f, indent=1, sort_keys=True)
+
+
+def rows(cycles, measurements=5, us=100.0):
+    return [
+        {"name": "k/cycles", "us_per_call": us,
+         "derived": f"cycles={cycles};config=a=1"},
+        {"name": "k/cold", "us_per_call": us,
+         "derived": f"measurements={measurements}"},
+    ]
+
+
+def test_parse_derived():
+    d = parse_derived("cycles=123;saving=91.2%;speedup_x1000=1197;"
+                      "exact=28/28;config=block_q=256;x=1.5x")
+    assert d["cycles"] == 123.0
+    assert d["saving"] == 91.2
+    assert d["speedup_x1000"] == 1197.0
+    assert d["exact"] == 28.0
+    assert d["x"] == 1.5
+
+
+def test_gate_passes_within_tolerance(tmp_path):
+    write_art(tmp_path / "base", "t", rows(1000))
+    write_art(tmp_path / "cur", "t", rows(1100))          # +10% < 15%
+    failures, _ = compare(str(tmp_path / "base"), str(tmp_path / "cur"))
+    assert failures == []
+
+
+def test_gate_fails_on_injected_slowdown(tmp_path):
+    write_art(tmp_path / "base", "t", rows(1000))
+    write_art(tmp_path / "cur", "t", rows(1300))          # +30% > 15%
+    failures, _ = compare(str(tmp_path / "base"), str(tmp_path / "cur"))
+    assert len(failures) == 1 and "cycles" in failures[0]
+    # and through the CLI entry point
+    rc = main(["--baseline", str(tmp_path / "base"),
+               "--current", str(tmp_path / "cur")])
+    assert rc == 1
+
+
+def test_gate_catches_cache_regression(tmp_path):
+    # warm-run measurements growing (cache broken) must fail
+    write_art(tmp_path / "base", "t", rows(1000, measurements=0))
+    write_art(tmp_path / "cur", "t", rows(1000, measurements=27))
+    failures, _ = compare(str(tmp_path / "base"), str(tmp_path / "cur"))
+    assert any("measurements" in f for f in failures)
+
+
+def test_gate_ignores_wall_time_by_default(tmp_path):
+    write_art(tmp_path / "base", "t", rows(1000, us=100.0))
+    write_art(tmp_path / "cur", "t", rows(1000, us=900.0))   # 9x slower wall
+    failures, _ = compare(str(tmp_path / "base"), str(tmp_path / "cur"))
+    assert failures == []
+    failures, _ = compare(str(tmp_path / "base"), str(tmp_path / "cur"),
+                          include_timing=True)
+    assert any("us_per_call" in f for f in failures)
+
+
+def test_gate_fails_on_missing_rows_and_files(tmp_path):
+    write_art(tmp_path / "base", "t", rows(1000))
+    write_art(tmp_path / "cur", "t", rows(1000)[:1])      # row dropped
+    failures, _ = compare(str(tmp_path / "base"), str(tmp_path / "cur"))
+    assert any("disappeared" in f for f in failures)
+    failures, _ = compare(str(tmp_path / "base"), str(tmp_path / "empty"))
+    assert any("missing" in f for f in failures)
+
+
+def test_gate_allows_new_rows(tmp_path):
+    write_art(tmp_path / "base", "t", rows(1000))
+    write_art(tmp_path / "cur", "t",
+              rows(1000) + [{"name": "k/new", "us_per_call": 0.0,
+                             "derived": "cycles=5"}])
+    failures, notes = compare(str(tmp_path / "base"), str(tmp_path / "cur"))
+    assert failures == [] and any("new row" in n for n in notes)
+
+
+def test_gate_higher_better_direction(tmp_path):
+    base = [{"name": "k/s", "us_per_call": 0.0,
+             "derived": "speedup_x1000=1200"}]
+    cur = [{"name": "k/s", "us_per_call": 0.0,
+            "derived": "speedup_x1000=900"}]              # tuner got worse
+    write_art(tmp_path / "base", "t", base)
+    write_art(tmp_path / "cur", "t", cur)
+    failures, _ = compare(str(tmp_path / "base"), str(tmp_path / "cur"))
+    assert len(failures) == 1 and "down" in failures[0]
+
+
+def test_gate_errors_on_failed_bench(tmp_path):
+    os.makedirs(tmp_path / "base", exist_ok=True)
+    art = {"bench": "t", "rows": [], "error": "RuntimeError: boom"}
+    for d in ("base", "cur"):
+        os.makedirs(tmp_path / d, exist_ok=True)
+        with open(tmp_path / d / "BENCH_t.json", "w") as f:
+            json.dump(art, f)
+    with pytest.raises(SystemExit):
+        compare(str(tmp_path / "base"), str(tmp_path / "cur"))

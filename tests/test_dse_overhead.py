@@ -2,11 +2,9 @@
 allocation, DSE Pareto sweep, incremental re-instrumentation."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.core import (OverheadModel, ProbeConfig, adapt_allocation,
-                        measure_incremental, measure_overhead, probe,
-                        run_dse)
+                        measure_incremental, measure_overhead, run_dse)
 from repro.core.buffer import state_bytes
 
 

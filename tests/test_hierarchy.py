@@ -1,7 +1,6 @@
 """Hierarchy extraction (C-to-RTL mapping analogue) + inline policies."""
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.core import extract, probe, ProbeConfig
 from repro.core.hierarchy import normalize_stack

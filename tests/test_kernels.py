@@ -32,6 +32,40 @@ def test_flash_attention_sweep(B, H, Hkv, S, D, dtype):
     assert _rel(o.astype(jnp.float32), o_ref.astype(jnp.float32)) < tol
 
 
+@pytest.mark.parametrize("bq,bk,pp", [
+    (64, 64, 2),       # pipelined kv groups
+    (64, 64, 4),
+    (128, 64, 1),      # unequal blocks: diagonal spans >1 kv block per q
+    (64, 32, 4),       #   block (regression: finalize/skip used the q
+    (256, 64, 4),      #   block's FIRST row instead of its last)
+    (32, 64, 2),
+])
+def test_flash_attention_blocks_pipeline(bq, bk, pp):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(k1, (2, 4, 256, 32))
+    k = jax.random.normal(k2, (2, 4, 256, 32))
+    v = jax.random.normal(k3, (2, 4, 256, 32))
+    for causal in (True, False):
+        o = fa.flash_attention(q, k, v, causal=causal, block_q=bq,
+                               block_k=bk, pipeline=pp, interpret=True)
+        o_ref = ref.flash_attention_ref(q, k, v, causal=causal)
+        assert _rel(o, o_ref) < 2e-5, (bq, bk, pp, causal)
+
+
+def test_ssd_scan_pipeline():
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    B, H, G, L, P, N = 1, 4, 2, 128, 16, 32
+    x = jax.random.normal(ks[0], (B, H, L, P)) * 0.5
+    a = -jnp.abs(jax.random.normal(ks[1], (B, H, L))) * 0.3
+    b = jax.random.normal(ks[2], (B, G, L, N)) * 0.5
+    c = jax.random.normal(ks[3], (B, G, L, N)) * 0.5
+    y_ref, _ = ref.ssd_ref(x, a, b, c)
+    for chunk, pp in [(64, 2), (64, 4), (128, 4), (32, 2)]:
+        y = ssdk.ssd_scan(x, a, b, c, chunk=chunk, pipeline=pp,
+                          interpret=True)
+        assert _rel(y, y_ref) < 2e-5, (chunk, pp)
+
+
 def test_flash_attention_noncausal():
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
     q = jax.random.normal(k1, (1, 2, 128, 32))

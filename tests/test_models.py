@@ -7,9 +7,8 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ShapeConfig
-from repro.configs.registry import (CONFIGS, all_cells, get_config,
-                                    list_archs, smoke_config,
-                                    supported_shapes)
+from repro.configs.registry import (all_cells, get_config, list_archs,
+                                    smoke_config)
 from repro.models import Model
 from tests.conftest import tiny_batch
 

@@ -3,7 +3,6 @@ error-feedback compression."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import TrainConfig
 from repro.optim import adamw, compression

@@ -77,7 +77,6 @@ def test_quantize_error_bounded(rows, cols, scale):
 def test_probe_report_invariants(n_layers, width_pow, seed):
     """start <= end; child total <= ancestor total; span >= any total."""
     from repro.core import probe, ProbeConfig
-    from repro.core.report import build_report
     d = 2 ** width_pow
 
     def fn(x, w):
