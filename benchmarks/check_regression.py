@@ -34,7 +34,7 @@ from typing import Dict, Iterator, List, Optional, Tuple
 LOWER_BETTER = (
     "cycles", "span", "state_B", "state_bytes", "dram_B", "extra_eqns",
     "probe_ops", "probe_bytes", "measurements", "probed_steps",
-    "mean_cycles",
+    "mean_cycles", "skew", "wire_B",
 )
 HIGHER_BETTER = ("speedup_x1000", "saving", "exact", "cache_hits")
 

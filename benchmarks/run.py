@@ -42,10 +42,11 @@ def main() -> None:
     except AttributeError:
         pass
 
-    from benchmarks import (bench_accuracy, bench_discrepancy, bench_dse,
-                            bench_incremental, bench_latency_impact,
-                            bench_offload, bench_overhead, bench_roofline,
-                            bench_streaming, common)
+    from benchmarks import (bench_accuracy, bench_discrepancy,
+                            bench_distributed, bench_dse, bench_incremental,
+                            bench_latency_impact, bench_offload,
+                            bench_overhead, bench_roofline, bench_streaming,
+                            common)
     benches = [
         ("Table II  (cycle accuracy, 28 designs)", bench_accuracy),
         ("Fig 8/9/10 (overhead + analytical model)", bench_overhead),
@@ -55,6 +56,7 @@ def main() -> None:
         ("Fig 13    (DSE Pareto + kernel autotune)", bench_dse),
         ("Fig 1/14 + Table IV (discrepancies)", bench_discrepancy),
         ("Streaming (ProbeSession per-step overhead)", bench_streaming),
+        ("Distributed (mesh probe: skew vs mesh size)", bench_distributed),
         ("Roofline  (dry-run derived)", bench_roofline),
     ]
     shorts = [m.__name__.split(".")[-1].replace("bench_", "")

@@ -28,6 +28,9 @@ from repro.core.incremental import (measure_incremental, EvalCache,
 from repro.core.overhead import OverheadModel, measure_overhead, adapt_allocation
 from repro.core.streaming import (ProbeSession, StreamAggregator,
                                   StreamingSink, StreamSnapshot)
+from repro.core.meshprobe import (CycleRecord, MeshProbedFunction,
+                                  MeshProbeSession, MeshReport, ShardOracle,
+                                  decode_mesh_record, mesh_probe)
 
 __all__ = [
     "probe", "ProbeConfig", "ProbedFunction", "Hierarchy", "extract",
@@ -40,4 +43,7 @@ __all__ = [
     # streaming telemetry (continuous in-production sessions)
     "ProbeSession", "StreamAggregator", "StreamingSink", "StreamSnapshot",
     "streaming_table", "streaming_bump_chart",
+    # mesh-aware probing (per-device cycle records over sharded programs)
+    "mesh_probe", "MeshProbedFunction", "MeshProbeSession", "MeshReport",
+    "CycleRecord", "ShardOracle", "decode_mesh_record",
 ]

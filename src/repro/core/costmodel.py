@@ -12,9 +12,11 @@ swaps this model clock for hardware timestamps; nothing else changes.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import math
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -44,8 +46,49 @@ _NO_FLOP = {
 }
 _COLLECTIVES = {
     "psum", "all_gather", "reduce_scatter", "all_to_all", "ppermute",
-    "psum_scatter", "pmax", "pmin",
+    "psum_scatter", "pmax", "pmin", "pbroadcast",
 }
+
+# Mesh axis sizes for the collective term. When set (``collective_axis_
+# sizes``), collective eqns are costed with the ring-model *wire bytes*
+# for their actual group size — per-device cycles then respond to the
+# mesh shape, which is what mesh-aware probing and communication-aware
+# DSE tune against. When unset (the default), the legacy operand-bytes
+# approximation keeps single-device numbers (and committed benchmark
+# baselines) unchanged.
+_AXIS_SIZES: contextvars.ContextVar[Optional[Dict[str, int]]] = \
+    contextvars.ContextVar("repro_collective_axis_sizes", default=None)
+
+
+@contextlib.contextmanager
+def collective_axis_sizes(sizes: Optional[Dict[str, int]]):
+    """Cost collectives against these mesh axis sizes (ring wire model)."""
+    tok = _AXIS_SIZES.set(dict(sizes) if sizes is not None else None)
+    try:
+        yield
+    finally:
+        _AXIS_SIZES.reset(tok)
+
+
+def current_axis_sizes() -> Optional[Dict[str, int]]:
+    return _AXIS_SIZES.get()
+
+
+def _collective_comm_bytes(eqn, in_bytes: int, out_bytes: int) -> int:
+    """Comm bytes of a collective eqn: ring wire model when mesh axis
+    sizes are in context, legacy operand-bytes fallback otherwise."""
+    sizes = _AXIS_SIZES.get()
+    if sizes is None:
+        return in_bytes
+    from repro.launch.collectives import (PRIMITIVE_KINDS, collective_axes,
+                                          ring_wire_bytes)
+    kind = PRIMITIVE_KINDS.get(eqn.primitive.name)
+    if kind is None:
+        return in_bytes
+    g = 1
+    for a in collective_axes(eqn):
+        g *= int(sizes.get(a, 1))
+    return int(math.ceil(ring_wire_bytes(kind, out_bytes, g)))
 
 
 def _aval_bytes(aval) -> int:
@@ -148,7 +191,7 @@ def eqn_cost(eqn) -> EqnCost:
     elif name in ("conv_general_dilated",):
         flops = _conv_flops(eqn)
     elif name in _COLLECTIVES:
-        comm = in_bytes
+        comm = _collective_comm_bytes(eqn, in_bytes, out_bytes)
         flops = _aval_size(eqn.outvars[0].aval) if eqn.outvars else 0
     elif name in _NO_FLOP:
         flops = 0

@@ -103,6 +103,13 @@ class Oracle:
         for pid in b[i:]:
             self._enter(st, pid, self.asg.spill[pid])
 
+    def _bind(self, eqn, invals):
+        """Concrete evaluation of one first-order equation. Subclasses
+        may substitute primitives that cannot run outside their original
+        context (``meshprobe.ShardOracle`` stubs collectives — cycle
+        advances use the precomputed ``info.cycles`` either way)."""
+        return eqn.primitive.bind(*invals, **eqn.params)
+
     # -- evaluation -------------------------------------------------------
     def run(self, closed_jaxpr, args) -> OracleCounters:
         st = OracleCounters(n=self.asg.n, depth=self.asg.depth)
@@ -149,7 +156,7 @@ class Oracle:
                     outs = self._eval(_as_jaxpr(sub), sub_consts, invals,
                                       st, cur)
             else:
-                outs = eqn.primitive.bind(*invals, **eqn.params)
+                outs = self._bind(eqn, invals)
                 if not isinstance(outs, (list, tuple)):
                     outs = [outs]
                 st.cycle += info.cycles if info else cm.eqn_cost(eqn).cycles

@@ -124,6 +124,34 @@ class StreamAggregator:
         b = int(np.searchsorted(cum, target))
         return int(np.clip(_bucket_rep(b), self.min[pid], self.max[pid]))
 
+    # -- cross-device reductions (mesh probing) -------------------------
+    # A device-major aggregator lays its rows out as (device, probe)
+    # flattened — row d*n_probes+p is probe p on device d, mirroring the
+    # device-sharded counter buffer. These views reduce across that
+    # leading device axis.
+
+    REDUCTIONS = ("per-device", "max", "mean")
+
+    def reduce(self, mode: str = "max", n_devices: int = 1) -> np.ndarray:
+        """Per-probe total cycles reduced across devices: ``max`` (the
+        critical path), ``mean`` (the balanced view), or ``per-device``
+        (the full (D, n) matrix)."""
+        t = self.total.reshape(int(n_devices), -1)
+        if mode == "per-device":
+            return t
+        if mode == "max":
+            return t.max(axis=0)
+        if mode == "mean":
+            return t.mean(axis=0)
+        raise ValueError(f"unknown reduction {mode!r}; "
+                         f"expected one of {self.REDUCTIONS}")
+
+    def skew(self, n_devices: int) -> np.ndarray:
+        """Per-probe max−min of total cycles across devices — the
+        straggler signal (0 = perfectly balanced)."""
+        t = self.total.reshape(int(n_devices), -1)
+        return t.max(axis=0) - t.min(axis=0)
+
     @property
     def nbytes(self) -> int:
         return (self.count.nbytes + self.total.nbytes + self.min.nbytes +

@@ -1,0 +1,105 @@
+"""Version compatibility for jax's sharding surface.
+
+The repo targets the current jax API (``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.AxisType``) but must also run on the
+0.4.x line the CI benchmark baselines are pinned to, where the same
+machinery lives under ``jax.experimental.shard_map`` with a different
+keyword surface and the mesh context is the legacy ``Mesh`` context
+manager. Everything that touches that surface goes through here so the
+rest of the codebase reads as if only one jax existed.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, Iterable, Optional, Tuple
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: Optional[bool] = None,
+              check_rep: Optional[bool] = None):
+    """``jax.shard_map`` with the new keyword surface on every jax.
+
+    ``axis_names`` restricts manual axes (the rest stay auto-sharded);
+    ``check_vma`` / ``check_rep`` are the new/old names for the same
+    replication check. On old jax the restriction is translated to the
+    ``auto=`` complement set.
+    """
+    check = check_vma if check_vma is not None else check_rep
+    if hasattr(jax, "shard_map"):
+        kw: Dict[str, Any] = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        if check is not None:
+            kw["check_vma"] = bool(check)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    if check is not None:
+        kw["check_rep"] = bool(check)
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
+def mesh_context(mesh):
+    """Enter ``mesh`` as the ambient mesh (``jax.set_mesh`` analogue).
+
+    Falls back to ``jax.sharding.use_mesh`` and finally to the legacy
+    ``Mesh`` context manager on old jax. ``mesh=None`` is a no-op.
+    """
+    if mesh is None:
+        return contextlib.nullcontext()
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh  # legacy: Mesh is itself a context manager
+
+
+def get_mesh():
+    """The ambient mesh (abstract on new jax, physical on old), or None."""
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and getattr(m, "axis_names", None):
+            return m
+    except AttributeError:
+        pass
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+@contextlib.contextmanager
+def extend_axis_env(sizes: Dict[str, int]):
+    """Bind mesh axis names for out-of-``shard_map`` tracing.
+
+    Lets ``jax.make_jaxpr`` trace a per-shard function that uses
+    collectives (``lax.psum(x, "dev")`` …) without an enclosing
+    ``shard_map`` — the mesh-probe builder traces the shard body once
+    this way. No-op when the running jax needs no env (or the private
+    helper moved); the caller then falls back to collective-free
+    tracing errors surfacing naturally.
+    """
+    items: Iterable[Tuple[str, int]] = tuple(sizes.items())
+    ext = None
+    for modname in ("jax._src.core", "jax.core"):
+        try:
+            mod = __import__(modname, fromlist=["extend_axis_env_nd"])
+            ext = getattr(mod, "extend_axis_env_nd", None)
+        except ImportError:
+            ext = None
+        if ext is not None:
+            break
+    if ext is None:
+        yield
+        return
+    with ext(list(items)):
+        yield

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ShapeConfig, TrainConfig
+from repro.distributed import compat
 from repro.models.model import Model
 from repro.optim import adamw, compression
 from repro.optim.schedule import make_schedule
@@ -90,7 +91,7 @@ def build_train_step(model: Model, tcfg: TrainConfig) -> Callable:
     def compressed_grads_of(params, batch, residual):
         """Pod-local grads + int8 error-feedback ring exchange over the
         pod axis. data/model axes stay auto-sharded inside."""
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = compat.get_mesh()
         n_pods = mesh.shape["pod"]
         perm = [(i, (i + 1) % n_pods) for i in range(n_pods)]
 
@@ -126,7 +127,7 @@ def build_train_step(model: Model, tcfg: TrainConfig) -> Callable:
         rep_r = jax.tree_util.tree_map(lambda _: P(), residual)
         metrics_spec = {"nll": P()} if k > 1 else \
             {"nll": P(), "z_loss": P(), "aux_loss": P()}
-        return jax.shard_map(
+        return compat.shard_map(
             pod_local, mesh=mesh,
             in_specs=(rep_p, in_batch_specs, rep_r),
             out_specs=(P(), metrics_spec, rep_p, rep_r),
@@ -206,3 +207,75 @@ def build_decode_step(model: Model) -> Callable:
                                                           batch)
         return logits, cache, next_token
     return decode_step
+
+
+def build_eval_step(model: Model) -> Callable:
+    """Forward-only eval step (loss + metrics, no optimizer). Probeable
+    as-is on one device, or per shard via ``build_dp_eval_step``."""
+    def eval_step(params, batch):
+        with jax.named_scope("eval"):
+            loss, metrics = model.loss_fn(params, batch)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return loss, metrics
+    return eval_step
+
+
+# ---------------------------------------------------- per-shard bodies
+#
+# Explicit-collective SPMD bodies for `shard_map` — and therefore for
+# `repro.core.mesh_probe`, which records a per-device cycle row for
+# every probe inside them. Parameters/optimizer state are replicated,
+# the batch is sharded over `axis` (pure data parallelism), and the
+# gradient exchange is an explicit `psum`-mean that the probe attributes
+# to the "grad_exchange" scope (ring wire-byte model; see
+# launch/collectives.py). The auto-sharded `build_train_step` stays the
+# production path — these exist so the *same* training math is
+# observable per device.
+
+def _pmean_tree(tree, axis):
+    return jax.tree_util.tree_map(lambda x: jax.lax.pmean(x, axis), tree)
+
+
+def build_dp_train_step(model: Model, tcfg: TrainConfig,
+                        axis="dev") -> Callable:
+    """Data-parallel per-shard train step: grads_local -> psum-mean over
+    ``axis`` -> replicated AdamW update. Returns
+    ``train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics)`` with every output replicated."""
+    schedule = make_schedule(model.cfg.schedule, tcfg)
+
+    def loss_fn(params, batch):
+        with jax.named_scope("loss"):
+            return model.loss_fn(params, batch)
+
+    def train_step(params, opt_state, batch):
+        with jax.named_scope("grads"):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        with jax.named_scope("grad_exchange"):
+            grads = _pmean_tree(grads, axis)
+            loss = jax.lax.pmean(loss, axis)
+            metrics = _pmean_tree(metrics, axis)
+        with jax.named_scope("optimizer"):
+            params, opt_state, om = adamw.update(params, grads, opt_state,
+                                                 tcfg, schedule)
+        metrics = dict(metrics)
+        metrics.update(loss=loss, **om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_dp_eval_step(model: Model, axis="dev") -> Callable:
+    """Data-parallel per-shard eval step (loss psum-meaned over ``axis``)."""
+    base = build_eval_step(model)
+
+    def eval_step(params, batch):
+        loss, metrics = base(params, batch)
+        with jax.named_scope("loss_exchange"):
+            loss = jax.lax.pmean(loss, axis)
+            metrics = _pmean_tree(metrics, axis)
+        return loss, metrics
+
+    return eval_step

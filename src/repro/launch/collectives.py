@@ -1,10 +1,10 @@
-"""Collective-bytes extraction from compiled HLO text.
+"""Collective-bytes extraction: compiled HLO text + traced-jaxpr views.
 
-``cost_analysis()`` does not expose collective traffic, so we parse the
-compiled module: every all-gather / all-reduce / reduce-scatter /
-all-to-all / collective-permute op contributes per-device *wire bytes*
-under the standard ring model, using its result shape and the replica
-group size G parsed from the op:
+``cost_analysis()`` does not expose collective traffic, so we model it
+ourselves. Every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute contributes per-device *wire bytes* under the
+standard ring model, from its result size and the participating group
+size G (:func:`ring_wire_bytes`):
 
     all-gather          out_bytes * (G-1)/G          (each device receives
                                                       everyone else's shard)
@@ -13,17 +13,35 @@ group size G parsed from the op:
     all-reduce          2 * bytes * (G-1)/G          (RS + AG phases)
     all-to-all          bytes * (G-1)/G
     collective-permute  bytes                        (point-to-point)
+
+Two front-ends share the model: :func:`parse_collective_bytes` parses a
+compiled HLO module (post-GSPMD ground truth, no scope information) and
+:func:`jaxpr_collectives` walks a traced per-shard jaxpr (pre-compile,
+knows the scope hierarchy — what the mesh probe joins cycle counters
+against; see ``core/meshprobe.py``).
 """
 from __future__ import annotations
 
 import re
 from collections import defaultdict
-from typing import Dict
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
     "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# jaxpr collective primitive -> HLO collective kind
+PRIMITIVE_KINDS = {
+    "psum": "all-reduce", "pmax": "all-reduce", "pmin": "all-reduce",
+    "all_gather": "all-gather", "reduce_scatter": "reduce-scatter",
+    "psum_scatter": "reduce-scatter", "all_to_all": "all-to-all",
+    "ppermute": "collective-permute", "pbroadcast": "all-gather",
 }
 
 _OP_RE = re.compile(
@@ -32,6 +50,28 @@ _OP_RE = re.compile(
     r"(?:-start)?\(")
 _GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def ring_wire_bytes(kind: str, nbytes: float, group_size: int) -> float:
+    """Per-device wire bytes of one collective under the ring model.
+
+    ``nbytes`` is the op's *result* size; ``group_size`` the number of
+    participating devices. G == 1 collectives move nothing (except a
+    self-permute, which still copies its payload).
+    """
+    g = max(int(group_size), 1)
+    if kind == "all-gather":
+        return nbytes * (g - 1) / g
+    if kind == "reduce-scatter":
+        return nbytes * (g - 1)
+    if kind == "all-reduce":
+        return 2.0 * nbytes * (g - 1) / g
+    if kind == "all-to-all":
+        return nbytes * (g - 1) / g
+    if kind == "collective-permute":
+        return float(nbytes)
+    raise ValueError(f"unknown collective kind {kind!r}; "
+                     f"expected one of {COLLECTIVE_KINDS}")
 
 
 def _shape_bytes(dtype: str, dims: str) -> int:
@@ -50,7 +90,26 @@ def _tuple_bytes(tup: str) -> int:
     return total
 
 
+def parse_replica_group_size(line: str) -> int:
+    """Group size G from an HLO op line's ``replica_groups`` attribute.
+
+    Handles the explicit form ``{{0,1},{2,3}}`` (G = size of the first
+    group; an empty ``{{}}`` means a single all-devices group of unknown
+    size -> 1) and the iota form ``[n,m]<=[...]`` (G = m). Lines without
+    the attribute (e.g. ``collective-permute``) return 1.
+    """
+    gm = _GROUPS_RE.search(line)
+    if gm:
+        return max(len([x for x in gm.group(1).split(",")
+                        if x.strip() != ""]), 1)
+    gi = _GROUPS_IOTA_RE.search(line)
+    if gi:
+        return max(int(gi.group(2)), 1)
+    return 1
+
+
 def parse_collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Aggregate per-kind collective traffic from compiled HLO text."""
     out: Dict[str, Dict[str, float]] = defaultdict(
         lambda: {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0})
     for line in hlo_text.splitlines():
@@ -61,27 +120,73 @@ def parse_collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
         if "-done" in line:
             continue
         nbytes = _tuple_bytes(tup) if tup else _shape_bytes(dtype, dims)
-        g = 1
-        gm = _GROUPS_RE.search(line)
-        if gm:
-            g = len([x for x in gm.group(1).split(",") if x.strip() != ""])
-        else:
-            gi = _GROUPS_IOTA_RE.search(line)
-            if gi:
-                g = int(gi.group(2))
-        g = max(g, 1)
-        if kind == "all-gather":
-            wire = nbytes * (g - 1) / g
-        elif kind == "reduce-scatter":
-            wire = nbytes * (g - 1)
-        elif kind == "all-reduce":
-            wire = 2.0 * nbytes * (g - 1) / g
-        elif kind == "all-to-all":
-            wire = nbytes * (g - 1) / g
-        else:   # collective-permute
-            wire = float(nbytes)
+        g = parse_replica_group_size(line)
         rec = out[kind]
         rec["count"] += 1
         rec["result_bytes"] += float(nbytes)
-        rec["wire_bytes"] += float(wire)
+        rec["wire_bytes"] += float(ring_wire_bytes(kind, nbytes, g))
     return dict(out)
+
+
+# ------------------------------------------------- traced-jaxpr view
+
+@dataclass(frozen=True)
+class CollectiveSite:
+    """One collective equation in a traced per-shard program."""
+    path: str                 # scope path (hierarchy join key)
+    primitive: str            # jaxpr primitive name
+    kind: str                 # HLO collective kind (ring-model key)
+    axes: Tuple[str, ...]     # mesh axes it runs over
+    group_size: int           # participating devices G
+    result_bytes: int         # per-shard result size
+    wire_bytes: float         # ring-model per-device wire bytes
+
+
+def collective_axes(eqn) -> Tuple[str, ...]:
+    """Mesh axis names a collective eqn runs over (possibly several)."""
+    axes = eqn.params.get("axes", eqn.params.get("axis_name"))
+    if axes is None:
+        return ()
+    if isinstance(axes, (str, int)):
+        return (str(axes),)
+    return tuple(str(a) for a in axes)
+
+
+def _aval_nbytes(aval) -> int:
+    try:
+        import numpy as np
+        return int(np.prod(aval.shape)) * aval.dtype.itemsize
+    except Exception:
+        return 0
+
+
+def jaxpr_collectives(jaxpr, axis_sizes: Dict[str, int],
+                      eqn_paths: Optional[Dict[int, str]] = None,
+                      _path: str = "") -> List[CollectiveSite]:
+    """Walk a (per-shard) jaxpr and model every collective equation.
+
+    ``axis_sizes`` maps mesh axis name -> size (``dict(mesh.shape)``).
+    ``eqn_paths`` optionally maps ``id(eqn)`` -> scope path (the
+    hierarchy's ``eqn_info``); unknown eqns inherit the walk prefix.
+    Recurses into control flow / call sub-jaxprs, so sites inside scan
+    bodies are attributed to their loop scope.
+    """
+    from repro.core import costmodel as cm
+    sites: List[CollectiveSite] = []
+    for eqn in jaxpr.eqns:
+        path = (eqn_paths or {}).get(id(eqn), _path)
+        kind = PRIMITIVE_KINDS.get(eqn.primitive.name)
+        if kind is not None:
+            axes = collective_axes(eqn)
+            g = 1
+            for a in axes:
+                g *= int(axis_sizes.get(a, 1))
+            nbytes = sum(_aval_nbytes(v.aval) for v in eqn.outvars)
+            sites.append(CollectiveSite(
+                path=path, primitive=eqn.primitive.name, kind=kind,
+                axes=axes, group_size=g, result_bytes=nbytes,
+                wire_bytes=ring_wire_bytes(kind, nbytes, g)))
+        for sub in cm._sub_jaxprs(eqn):
+            sites.extend(jaxpr_collectives(cm._as_jaxpr(sub), axis_sizes,
+                                           eqn_paths, _path=path))
+    return sites

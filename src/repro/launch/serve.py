@@ -23,11 +23,37 @@ from repro.models.frontends import synth_frontend_batch
 from repro.models.model import Model
 
 
+def _mesh_decode_session(model, shape, mesh_shape, frontend: bool,
+                         targets, max_probes, window_steps):
+    """Mesh-probed decode: batch (and every cache leaf's batch dim)
+    sharded over the probing mesh, so the live session records one
+    cycle-counter row per device (docs/distributed.md)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core import MeshProbeSession, ProbeConfig, mesh_probe
+    from repro.launch.mesh import make_mesh, probe_axis_names
+    axes = probe_axis_names(mesh_shape)
+    pmesh = make_mesh(mesh_shape, axes)
+    cspecs, caxes = model.cache_specs(shape)
+    cache_spec = {k: P(*[axes if a == "batch" else None
+                         for a in caxes[k]]) for k in cspecs}
+    batch_spec = ({"embeds": P(axes)} if frontend else
+                  {"tokens": P(axes)})
+    batch_spec["pos"] = P()
+    return MeshProbeSession(
+        mesh_probe(build_decode_step(model), pmesh,
+                   in_specs=(P(), cache_spec, batch_spec),
+                   out_specs=(P(axes), cache_spec, P(axes)),
+                   config=ProbeConfig(targets=targets,
+                                      max_probes=max_probes)),
+        window_steps=window_steps)
+
+
 def serve(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
           batch: int = 4, prompt_len: int = 32, max_new: int = 16,
           cache_len: int = 128, profile: bool = False,
           profile_targets: Tuple[str, ...] = ("",),
           profile_every: int = 8, profile_max_probes: int = 16,
+          profile_mesh: Tuple[int, ...] = (),
           autotune: bool = False, tune_cache: Optional[str] = None):
     if autotune:
         from repro.kernels import tuning
@@ -41,7 +67,15 @@ def serve(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
         model, ShapeConfig("pf", cache_len, batch, "prefill")))
     profile_every = max(profile_every, 1)
     session = None
-    if profile:
+    mesh_session = False
+    if profile and profile_mesh:
+        session = _mesh_decode_session(
+            model, ShapeConfig("pf", cache_len, batch, "decode"),
+            profile_mesh, cfg.frontend != "none", profile_targets,
+            profile_max_probes, max(profile_every, 1))
+        decode = session.step
+        mesh_session = True
+    elif profile:
         from repro.core import ProbeConfig, ProbeSession
         session = ProbeSession(
             build_decode_step(model),
@@ -77,11 +111,22 @@ def serve(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
         out_tokens.append(np.asarray(next_tok))
         if session is not None and session.steps % profile_every == 0:
             snap = session.snapshot()
-            hot = snap.bottleneck()
-            hot_s = f"{hot.path} (ema {hot.ema:.1f} cyc/call)" if hot else "-"
-            print(f"[probe] decode step {session.steps:4d}: "
-                  f"span={snap.span} cycles, state={snap.state_nbytes}B, "
-                  f"hot={hot_s}", flush=True)
+            if mesh_session:
+                d, p = snap.record.straggler()
+                print(f"[probe] decode step {session.steps:4d}: "
+                      f"span(max)={snap.span} cycles over "
+                      f"{snap.record.n_devices} devices, "
+                      f"straggler=dev{d}:{p} "
+                      f"(skew {int(snap.record.skew().max(initial=0))})",
+                      flush=True)
+            else:
+                hot = snap.bottleneck()
+                hot_s = (f"{hot.path} (ema {hot.ema:.1f} cyc/call)"
+                         if hot else "-")
+                print(f"[probe] decode step {session.steps:4d}: "
+                      f"span={snap.span} cycles, "
+                      f"state={snap.state_nbytes}B, "
+                      f"hot={hot_s}", flush=True)
     t_decode = time.time() - t0
     toks = np.stack(out_tokens, axis=1)
     print(f"prefill {prompt_len} tokens x{batch}: {t_prefill * 1e3:.1f} ms; "
@@ -92,8 +137,14 @@ def serve(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
         if final is not None:
             print("\n# streaming probe telemetry (decode loop)")
             print(final.table())
-            print("\n# bottleneck drift across windows")
-            print(final.bump_chart())
+            if mesh_session:
+                print("\n# per-device cycle records")
+                print(final.device_table())
+                print("\n# straggler heat view")
+                print(final.heat())
+            else:
+                print("\n# bottleneck drift across windows")
+                print(final.bump_chart())
     return toks
 
 
@@ -105,6 +156,9 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--profile", action="store_true",
                     help="run the decode loop under a live ProbeSession")
+    ap.add_argument("--mesh", default=None,
+                    help="profile per device on an N-way mesh, e.g. '8' "
+                         "(with --profile; batch must divide the mesh size)")
     ap.add_argument("--profile-targets", default="",
                     help="comma-separated probe subtree roots")
     ap.add_argument("--profile-every", type=int, default=8)
@@ -113,10 +167,12 @@ def main():
     ap.add_argument("--tune-cache", default=None,
                     help="eval cache dir (default .repro_cache/dse)")
     args = ap.parse_args()
+    from repro.launch.mesh import parse_mesh_arg
     toks = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
                  max_new=args.max_new, profile=args.profile,
                  profile_targets=tuple(args.profile_targets.split(",")),
                  profile_every=args.profile_every,
+                 profile_mesh=parse_mesh_arg(args.mesh),
                  autotune=args.autotune, tune_cache=args.tune_cache)
     print("sampled token ids (first sequence):", toks[0].tolist())
 

@@ -29,6 +29,7 @@ from repro.optim import adamw
 def train(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
           steps: int = 20, batch: int = 8, seq: int = 128,
           mesh_shape=None, probe_targets: Optional[tuple] = None,
+          probe_mesh: Optional[tuple] = None,
           checkpoint_dir: Optional[str] = None, resume: bool = False,
           tcfg: Optional[TrainConfig] = None, log_every: int = 10,
           probe_every: int = 0, autotune: bool = False,
@@ -67,7 +68,28 @@ def train(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
 
     step_fn = build_train_step(model, tcfg)
     session = None
-    if probe_targets is not None:
+    mesh_session = False
+    if probe_targets is not None and probe_mesh:
+        # mesh-aware probing: data-parallel per-shard step under a probed
+        # shard_map — one cycle-counter row per device (docs/distributed.md)
+        from jax.sharding import PartitionSpec as P
+        from repro.core import MeshProbeSession, ProbeConfig, mesh_probe
+        from repro.distributed.steps import build_dp_train_step
+        from repro.launch.mesh import make_mesh, probe_axis_names
+        axes = probe_axis_names(probe_mesh)
+        pmesh = make_mesh(probe_mesh, axes)
+        dp_step = build_dp_train_step(
+            model, tcfg, axis=axes[0] if len(axes) == 1 else axes)
+        session = MeshProbeSession(
+            mesh_probe(dp_step, pmesh,
+                       in_specs=(P(), P(), P(axes)),
+                       out_specs=(P(), P(), P()),
+                       config=ProbeConfig(targets=tuple(probe_targets),
+                                          max_probes=16)),
+            window_steps=max(probe_every or log_every, 1))
+        run_jitted = session.step
+        mesh_session = True
+    elif probe_targets is not None:
         from repro.core import ProbeConfig, ProbeSession
         session = ProbeSession(
             step_fn, ProbeConfig(targets=tuple(probe_targets),
@@ -83,9 +105,8 @@ def train(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
 
     ctx = shd.axis_rules(rules, mesh)
     history = []
-    import contextlib
-    mesh_ctx = jax.set_mesh(mesh) if mesh else contextlib.nullcontext()
-    with mesh_ctx, ctx:
+    from repro.distributed import compat
+    with compat.mesh_context(mesh), ctx:
         t0 = time.time()
         for step in range(start_step, steps):
             batch_np = pipe.batch_at(step)
@@ -119,11 +140,18 @@ def train(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
         if final is not None:
             print("\n# final streaming probe telemetry")
             print(final.table())
-            print(final.bump_chart())
+            if mesh_session:
+                print("\n# per-device cycle records")
+                print(final.device_table())
+                print("\n# straggler heat view")
+                print(final.heat())
+            else:
+                print(final.bump_chart())
     return params, opt_state, history
 
 
 def main():
+    from repro.launch.mesh import parse_mesh_arg
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--steps", type=int, default=20)
@@ -135,6 +163,11 @@ def main():
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--probe", action="store_true",
                     help="profile the train step with a live ProbeSession")
+    ap.add_argument("--mesh", default=None,
+                    help="probe per device on an N-way mesh, e.g. '8' or "
+                         "'2x4' (with --probe; batch must divide the mesh "
+                         "size). Force devices on CPU via XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8")
     ap.add_argument("--probe-targets", default="",
                     help="comma-separated probe subtree roots")
     ap.add_argument("--probe-every", type=int, default=0,
@@ -148,6 +181,7 @@ def main():
           batch=args.batch, seq=args.seq,
           probe_targets=(tuple(args.probe_targets.split(","))
                          if args.probe else None),
+          probe_mesh=parse_mesh_arg(args.mesh),
           probe_every=args.probe_every,
           checkpoint_dir=args.checkpoint_dir, resume=args.resume,
           autotune=args.autotune, tune_cache=args.tune_cache)

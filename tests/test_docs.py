@@ -1,0 +1,74 @@
+"""Docs stay executable: the same checker the `docs` CI job runs.
+
+The full snippet execution needs a fresh interpreter (the multi-device
+README quickstart forces an 8-device host platform before jax inits),
+so it runs as a slow subprocess; the link check and the block
+extractor are exercised in-process."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import check_docs  # noqa: E402
+
+
+def _md_files():
+    import glob
+    return [os.path.join(REPO, "README.md")] + \
+        sorted(glob.glob(os.path.join(REPO, "docs", "*.md")))
+
+
+def test_no_dead_links():
+    errors = []
+    for path in _md_files():
+        with open(path) as f:
+            errors += check_docs.check_links(path, f.read())
+    assert not errors, "\n".join(errors)
+
+
+def test_extractor_blocks_and_skip_marker():
+    text = "\n".join([
+        "intro",
+        "```python", "x = 1", "```",
+        "<!-- docs-check: skip -->",
+        "```python", "undefined_name", "```",
+        "```bash", "echo hi", "```",
+    ])
+    blocks = check_docs.extract_blocks(text)
+    assert [(b[0], b[3]) for b in blocks] == [
+        ("python", False), ("python", True), ("bash", False)]
+    assert check_docs.run_python("<test>", blocks) == []
+
+
+def test_extractor_reports_failures():
+    blocks = check_docs.extract_blocks(
+        "```python\nraise ValueError('boom')\n```")
+    errs = check_docs.run_python("<test>", blocks)
+    assert len(errs) == 1 and "boom" in errs[0]
+
+
+def test_readme_documents_streaming_entry_points():
+    """The PR-1 API surface must stay documented (drift guard)."""
+    with open(os.path.join(REPO, "README.md")) as f:
+        readme = f.read()
+    assert "stateful_call" in readme
+    assert "decode_record" in readme
+    assert "mesh_probe" in readme
+    assert "xla_force_host_platform_device_count" in readme
+
+
+@pytest.mark.slow
+def test_docs_snippets_execute():
+    """Run the real checker end-to-end in a clean interpreter."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)         # the checker sets its own
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tools", "check_docs.py")],
+        env=env, capture_output=True, text=True, timeout=540)
+    assert out.returncode == 0, (out.stdout[-2000:] + out.stderr[-3000:])
+    assert "all snippets executed" in out.stdout
