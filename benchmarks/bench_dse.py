@@ -65,6 +65,35 @@ def run():
         "warm-cache DSE re-measured despite identical kernels/configs"
     assert warm.best.config == cold.best.config
 
+    # ---- grid-step calibration of the cost model's body term ----------
+    # Measure per-tile cycles with intra-kernel grid-step probes on two
+    # configs that actually tile the q axis (causal skips exist), learn
+    # the measured/static ratio on ONE of them, and require the other's
+    # per-tile residual to shrink under the calibrated model.
+    from repro.core import costmodel as _cm
+    eng = mk_engine(EvalCache(tempfile.mkdtemp(prefix="bench_calib_")))
+    try:
+        src_t = eng.analyze({"block_q": 64, "block_k": 64, "pipeline": 1})
+        dst_t = eng.analyze({"block_q": 64, "block_k": 128, "pipeline": 1})
+        eng.measure_tiles(src_t)
+        eng.measure_tiles(dst_t)
+        resid_uncal = abs(dst_t.tile_residual)
+        scale = eng.calibrate([src_t])
+        dst_cal = eng.analyze(dst_t.config)
+        resid_cal = abs(dst_cal.resources.static_cycles /
+                        dst_cal.resources.grid_steps - dst_t.tile_measured)
+        emit("dse/calib/tiles", 0.0,
+             f"tile_static={src_t.tile_static:.0f};"
+             f"tile_measured={src_t.tile_measured:.0f};"
+             f"scale_x1000={scale * 1000:.0f}")
+        emit("dse/calib/residual", 0.0,
+             f"uncal={resid_uncal:.0f};cal={resid_cal:.0f};"
+             f"saving={100.0 * (1 - resid_cal / max(resid_uncal, 1e-9)):.0f}")
+        assert resid_cal < resid_uncal, \
+            "calibrated cost model did not shrink the per-tile residual"
+    finally:
+        _cm.clear_kernel_calibration()
+
 
 if __name__ == "__main__":
     run()

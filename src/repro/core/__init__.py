@@ -17,8 +17,9 @@ Plus: overhead (analytical resource model), dse (automated DSE).
 """
 from repro.core.pragma import ProbeConfig, ProbedFunction, probe
 from repro.core.hierarchy import Hierarchy, extract
-from repro.core.oracle import Oracle
-from repro.core.report import (Report, bump_chart, streaming_bump_chart,
+from repro.core.oracle import KernelOracle, Oracle
+from repro.core.report import (Report, bump_chart, kernel_grid_heat,
+                               kernel_grid_table, streaming_bump_chart,
                                streaming_table)
 from repro.core.dse import (run_dse, DSEResult, DSEEngine, SearchSpace,
                             Trial, TuneResult)
@@ -46,4 +47,6 @@ __all__ = [
     # mesh-aware probing (per-device cycle records over sharded programs)
     "mesh_probe", "MeshProbedFunction", "MeshProbeSession", "MeshReport",
     "CycleRecord", "ShardOracle", "decode_mesh_record",
+    # intra-kernel grid-step probing (ProbeConfig.kernel_probes)
+    "KernelOracle", "kernel_grid_table", "kernel_grid_heat",
 ]

@@ -134,6 +134,56 @@ def _conv_flops(eqn) -> int:
     return 2 * out_elems * k
 
 
+def pallas_kernel_name(eqn) -> str:
+    """Human name of a ``pallas_call``'s kernel body ('flash_kernel')."""
+    nsi = eqn.params.get("name_and_src_info")
+    name = getattr(nsi, "name", None) or eqn.params.get("name") or "kernel"
+    return str(name).lstrip("_")
+
+
+# Measured calibration of the block-level body term. The DSE engine
+# (``dse.DSEEngine.calibrate``) divides probed grid-step cycles by the
+# static estimate and installs the ratio here; ``_pallas_cost`` then
+# prices the body with measured — not modeled — per-tile cycles (the
+# causal-skip fraction the static max-branch estimate cannot see).
+# Process-global like the tuned-config registry (kernels.tuning).
+_KERNEL_CALIB: Dict[str, float] = {}
+
+
+def set_kernel_calibration(kernel: str, scale: float) -> None:
+    """Scale the static body-cycle term of kernel ``kernel`` (the
+    pallas body name, e.g. 'flash_kernel') by measured/static."""
+    _KERNEL_CALIB[kernel] = float(scale)
+
+
+def clear_kernel_calibration(kernel: Optional[str] = None) -> None:
+    if kernel is None:
+        _KERNEL_CALIB.clear()
+    else:
+        _KERNEL_CALIB.pop(kernel, None)
+
+
+def kernel_calibration(kernel: str) -> float:
+    return _KERNEL_CALIB.get(kernel, 1.0)
+
+
+def kernel_calibration_state() -> Tuple[Tuple[str, float], ...]:
+    """The full installed-calibration state, canonically ordered —
+    measurement cache keys include it so calibrated and uncalibrated
+    model-clock cycles never collide under one key."""
+    return tuple(sorted(_KERNEL_CALIB.items()))
+
+
+def pallas_dma_cycles(eqn) -> int:
+    """Per-grid-step HBM<->VMEM block DMA cycles of a ``pallas_call``.
+    The single definition shared by ``_pallas_cost`` and the grid-step
+    walker (``kernelprobe``) — the calibration ratio subtracts this
+    term from both sides, so the two must never drift."""
+    body = _as_jaxpr(eqn.params["jaxpr"])
+    block_bytes = sum(_aval_bytes(v.aval) for v in body.invars)
+    return int(math.ceil(block_bytes / HBM_BYTES_PER_CYCLE))
+
+
 def _pallas_grid_steps(eqn) -> int:
     gm = eqn.params.get("grid_mapping")
     grid = getattr(gm, "grid", ()) or ()
@@ -155,12 +205,15 @@ def _pallas_cost(eqn) -> EqnCost:
     body = _as_jaxpr(eqn.params["jaxpr"])
     steps = _pallas_grid_steps(eqn)
     body_cycles = static_jaxpr_cycles(body)
+    scale = kernel_calibration(pallas_kernel_name(eqn))
+    if scale != 1.0:
+        body_cycles = max(1, int(round(body_cycles * scale)))
     flops, bytes_ = jaxpr_flat_flops_bytes(body)
     # block DMA per grid step: every kernel operand ref (input blocks,
     # output blocks, scratch) is VMEM-resident; HBM-backed blocks move
     # across the memory system once per step
     block_bytes = sum(_aval_bytes(v.aval) for v in body.invars)
-    dma_cycles = int(math.ceil(block_bytes / HBM_BYTES_PER_CYCLE))
+    dma_cycles = pallas_dma_cycles(eqn)
     cycles = steps * max(1, body_cycles + dma_cycles)
     return EqnCost(flops=steps * flops,
                    bytes=steps * (bytes_ + block_bytes),

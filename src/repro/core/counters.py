@@ -41,6 +41,13 @@ def c64_add_int(a, value: int):
     return c64_add(a, jnp.broadcast_to(c64(value), a.shape))
 
 
+def c64_add_u32(a, lo):
+    """a + a traced uint32 scalar (kernel grid-step cycle merges —
+    per-step costs always fit one word; the carry still propagates)."""
+    lo32 = jnp.asarray(lo, U32)
+    return c64_add(a, jnp.stack([jnp.zeros_like(lo32), lo32], axis=-1))
+
+
 def c64_sub(a, b):
     """a - b (modular, like hardware counters)."""
     lo = a[..., 1] - b[..., 1]

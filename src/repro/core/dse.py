@@ -201,6 +201,16 @@ class Trial:
     cache_hits: int = 0
     measurements: int = 0
     is_default: bool = False
+    # grid-step calibration (``DSEEngine.measure_tiles``): per-tile
+    # cycles from the kernel-probed counters vs the cost model's static
+    # per-tile estimate; residual = static − measured (positive = the
+    # model over-prices tiles, e.g. causal skips it cannot see).
+    # tile_dma is the per-step block-DMA term, identical in both, so
+    # the calibration ratio is taken over the body term alone.
+    tile_static: Optional[float] = None
+    tile_measured: Optional[float] = None
+    tile_residual: Optional[float] = None
+    tile_dma: Optional[float] = None
 
     @property
     def measured(self) -> bool:
@@ -242,7 +252,8 @@ class TuneResult:
                     "cycles_per_step": t.cycles_per_step, "steps": t.steps,
                     "cache_hits": t.cache_hits,
                     "measurements": t.measurements,
-                    "is_default": t.is_default}
+                    "is_default": t.is_default,
+                    "tile_residual": t.tile_residual}
         return {
             "kernel": self.kernel_id, "device": self.device,
             "n_candidates": self.n_candidates, "n_pruned": self.n_pruned,
@@ -287,6 +298,8 @@ class DSEEngine:
         self.r0, self.eta, self.max_steps = r0, eta, max_steps
         self.static_prune_ratio = static_prune_ratio
         self.device = device_kind()
+        # kernel body names observed by measure_tiles (calibrate targets)
+        self._tile_kernels: set = set()
         # run accounting (reset per tune())
         self.n_measurements = 0
         self.n_cache_hits = 0
@@ -348,9 +361,25 @@ class DSEEngine:
         self.measured_steps += steps
         return snap.span / max(steps, 1)
 
+    def _eval_fingerprint(self, t: Trial) -> str:
+        """Trial fingerprint extended with the installed kernel-
+        calibration state: measured cycles come from the model clock,
+        whose pallas pricing is scaled by ``costmodel``'s process-
+        global calibration — cycles measured under different
+        calibrations must never collide under one cache key. The
+        uncalibrated state leaves the key unchanged (existing caches
+        stay warm)."""
+        from repro.core.costmodel import kernel_calibration_state
+        state = kernel_calibration_state()
+        if not state:
+            return t.fingerprint
+        tag = ";".join(f"{k}={v:.6f}" for k, v in state)
+        return f"{t.fingerprint}|calib[{tag}]"
+
     def evaluate(self, t: Trial, steps: int) -> float:
         """Cache-through evaluation at a rung of ``steps`` steps."""
-        hit = self.cache.get(self.space.kernel_id, t.config, t.fingerprint,
+        fp = self._eval_fingerprint(t)
+        hit = self.cache.get(self.space.kernel_id, t.config, fp,
                              self.device, min_steps=steps)
         if hit is not None:
             t.cache_hits += 1
@@ -362,9 +391,108 @@ class DSEEngine:
         t.measurements += 1
         t.cycles_per_step = cps
         t.steps = steps
-        self.cache.put(self.space.kernel_id, t.config, t.fingerprint,
+        self.cache.put(self.space.kernel_id, t.config, fp,
                        self.device, cycles_per_step=cps, steps=steps)
         return cps
+
+    # -- grid-step calibration (measured per-tile cycles) ----------------
+    def measure_tiles(self, t: Trial) -> Trial:
+        """Probe the candidate with intra-kernel grid-step counters and
+        record per-tile cycles on the trial.
+
+        ``tile_measured`` is the mean measured cycles per grid step
+        (sum of grid-probe totals over grid-probe calls — exact model-
+        clock counters that see ``pl.when`` skips), ``tile_static`` the
+        cost model's flat per-step estimate, ``tile_residual`` their
+        gap. The kernel body names observed are remembered as
+        ``calibrate()`` targets."""
+        from repro.core.instrument import decode_record
+        from repro.core.pragma import probe as _probe
+
+        from repro.core import costmodel as _cm
+        from repro.core import kernelprobe as _kp
+
+        fn = self.space.bind(t.config)
+        cfg = ProbeConfig(targets=("",), max_probes=16, buffer_depth=2,
+                          cycle_source=self.cycle_source,
+                          kernel_probes=("*",), inline="off_all")
+        pf = _probe(fn, cfg)
+        # retarget onto the kernel subtrees so deep grid probes can
+        # never be crowded out of the probe budget by shallow wrapper
+        # scopes (selection is preorder/shallow-first)
+        h = pf.trace(*self.space.args)
+        kpaths = tuple(n.path for n in h.root.walk() if n.kind == "kernel")
+        if not kpaths:
+            raise ValueError(
+                f"measure_tiles({t.config}): the bound function has no "
+                f"statically-gridded pallas kernels to probe")
+        pf.retarget(cfg.replace(targets=kpaths))
+        _, rec = pf(*self.space.args)
+        dec = decode_record(jax.device_get(rec))
+        grid_total = grid_calls = 0
+        for i, path in enumerate(pf.probe_paths()):
+            if path.endswith("/grid"):
+                grid_total += int(dec["totals"][i])
+                grid_calls += int(dec["calls"][i])
+                # <scope>/kernel/<name>#i/grid -> <name>
+                self._tile_kernels.add(
+                    path.rsplit("/", 2)[-2].split("#")[0])
+        if grid_calls:
+            t.tile_measured = grid_total / grid_calls
+        # per-step DMA term (shared by measured and static tiles): from
+        # the traced pallas equations, steps-weighted across kernels
+        dma_total = steps_total = 0
+        for pe in _cm._walk_pallas_eqns(pf.hierarchy.closed_jaxpr.jaxpr):
+            g = _kp.static_grid(pe)
+            if g is None:
+                continue
+            s = int(np.prod(g))
+            dma_total += _kp.dma_cycles(pe) * s
+            steps_total += s
+        if steps_total:
+            t.tile_dma = dma_total / steps_total
+        if t.resources is not None and t.resources.grid_steps:
+            t.tile_static = (t.resources.static_cycles /
+                             t.resources.grid_steps)
+        if t.tile_measured is not None and t.tile_static is not None:
+            t.tile_residual = t.tile_static - t.tile_measured
+        return t
+
+    def calibration(self, trials: Optional[Sequence[Trial]] = None
+                    ) -> Optional[float]:
+        """measured/static ratio of the per-tile BODY term (the DMA
+        term is identical on both sides and is not scaled by
+        ``costmodel._pallas_cost``, so it is subtracted before the
+        ratio — otherwise calibration could not converge even on the
+        trial it was measured from)."""
+        ratios = []
+        for t in (trials if trials is not None else []):
+            if t.tile_measured is None or not t.tile_static:
+                continue
+            dma = t.tile_dma or 0.0
+            body_static = t.tile_static - dma
+            if body_static <= 0:
+                continue
+            ratios.append(max(t.tile_measured - dma, 0.0) / body_static)
+        if not ratios:
+            return None
+        return float(np.mean(ratios))
+
+    def calibrate(self, trials: Sequence[Trial]) -> Optional[float]:
+        """Install the measured per-tile ratio into the cost model's
+        block-level body term (``costmodel.set_kernel_calibration``)
+        for every kernel body seen by ``measure_tiles``. Subsequent
+        ``analyze()`` / prune passes then price tiles with measured
+        grid-step cycles. Returns the scale (None without tile data);
+        undo with ``costmodel.clear_kernel_calibration()``."""
+        from repro.core import costmodel as _cm
+
+        scale = self.calibration(trials)
+        if scale is None:
+            return None
+        for kname in sorted(self._tile_kernels):
+            _cm.set_kernel_calibration(kname, scale)
+        return scale
 
     def successive_halving(self, trials: List[Trial]) -> Optional[Trial]:
         active = list(trials)

@@ -64,6 +64,7 @@ class ScopeNode:
     name: str
     path: str
     kind: str = "scope"               # scope | loop | while | cond | root
+                                      # | kernel (pallas_call subtree)
     trip_count: Optional[int] = None  # loops with static length
     dynamic: bool = False             # subtree contains while/cond
     opaque: bool = False              # shard_map etc: not probeable inside
@@ -71,6 +72,7 @@ class ScopeNode:
     own_cycles: int = 0               # direct-eqn cycles per single visit
     static_cycles: int = 0            # subtree cycles per single visit
     source: str = ""                  # file:line of first eqn (C-to-RTL map)
+    grid: Optional[Tuple[int, ...]] = None   # kernel grid loops only
     children: "Dict[str, ScopeNode]" = field(default_factory=dict)
 
     def walk(self):
@@ -123,7 +125,12 @@ class Hierarchy:
 def _source_of(eqn) -> str:
     try:
         from jax._src import source_info_util
-        frame = source_info_util.user_frame(eqn.source_info.traceback)
+        try:
+            # 0.4.x signature: user_frame(SourceInfo)
+            frame = source_info_util.user_frame(eqn.source_info)
+        except AttributeError:
+            # newer signature: user_frame(Traceback)
+            frame = source_info_util.user_frame(eqn.source_info.traceback)
         if frame is None:
             return ""
         return f"{frame.file_name.rsplit('/', 1)[-1]}:{frame.start_line}"
@@ -148,7 +155,13 @@ _DESCEND = {"pjit", "jit", "closed_call", "core_call", "custom_jvp_call",
 _LOOPS = {"scan": "loop", "while": "while"}
 
 
-def extract(closed_jaxpr) -> Hierarchy:
+def extract(closed_jaxpr, kernel_probes: Tuple[str, ...] = ()) -> Hierarchy:
+    """Extract the scope hierarchy. With ``kernel_probes`` (kernel body
+    names, '*' = all), matched ``pallas_call`` equations are descended
+    into ``<scope>/kernel/<name>#i/grid`` subtrees (see
+    ``core.kernelprobe``) instead of being flat-costed leaves."""
+    from repro.core import kernelprobe
+
     root = ScopeNode(name="", path="", kind="root")
     eqn_info: Dict[int, EqnInfo] = {}
 
@@ -194,6 +207,14 @@ def extract(closed_jaxpr) -> Hierarchy:
                 for sub in cm._sub_jaxprs(eqn):
                     walk(_as_jaxpr(sub), node, counters)
                     break    # only the call jaxpr
+            elif (name == "pallas_call" and kernel_probes and
+                  kernelprobe.matches(kernel_probes,
+                                      kernelprobe.kernel_name(eqn)) and
+                  (kpath := kernelprobe.extract_kernel_tree(
+                      eqn, node, _ensure, eqn_info, counters,
+                      _source_of)) is not None):
+                # grid-step probing: the kernel subtree owns the cycles
+                eqn_info[id(eqn)] = EqnInfo(path=node.path, sub_path=kpath)
             elif name == "shard_map":
                 # opaque region: costed as a black box, not probeable inside
                 idx = counters.get(node.path + "#smap", 0)

@@ -43,6 +43,7 @@ from jax.extend import core
 from jax._src.core import eval_jaxpr as _eval_jaxpr
 
 from repro.core import costmodel as cm
+from repro.core import kernelprobe
 from repro.core.buffer import HostSink
 from repro.core.counters import (c64, c64_add, c64_add_int, c64_sub,
                                  c64_to_int, c64_zeros, U32)
@@ -230,7 +231,9 @@ class Instrumenter:
             if self._chain(info.path):
                 return True
             if info.sub_path and (self._chain(info.sub_path) or
-                                  self.asg.id_of(info.sub_path) is not None):
+                                  self.asg.id_of(info.sub_path) is not None or
+                                  any(p.startswith(info.sub_path + "/")
+                                      for p in self.asg.paths)):
                 return True
             for sub in cm._sub_jaxprs(eqn):
                 if self._jaxpr_has_probes(_as_jaxpr(sub)):
@@ -295,6 +298,13 @@ class Instrumenter:
             elif name == "cond":
                 state = flush(state)
                 state, outs = self._cond(eqn, invals, state, info)
+            elif (name == "pallas_call" and
+                  kernelprobe.probed_kernel_path(self, eqn, info)):
+                # descended kernel: grid-step counters merge into the
+                # state on kernel exit (core.kernelprobe)
+                state = flush(state)
+                state, outs = kernelprobe.instrument_pallas(
+                    self, eqn, invals, state, info, cur_path)
             elif name in ("pjit", "jit", "closed_call", "core_call",
                           "custom_jvp_call", "custom_vjp_call",
                           "custom_vjp_call_jaxpr", "remat", "remat2",

@@ -1,0 +1,430 @@
+"""Intra-kernel grid-step probing — the probe layer *below* the jaxpr
+interpreter.
+
+The paper's probes cover "the full function hierarchy, including
+submodules and loops", but a ``pallas_call`` is a single opaque equation
+to the jaxpr instrumenter: flash-attention's kv-block pipeline loop and
+the SSD sub-chunk scan were priced as one flat cost-model number. This
+module extends exact counters into the kernel grid:
+
+- **Extraction** (:func:`extract_kernel_tree`, called by
+  ``hierarchy.extract`` behind ``ProbeConfig(kernel_probes=...)``):
+  each matched ``pallas_call`` contributes a subtree
+  ``<scope>/kernel/<name>#i/grid`` — the grid node is a loop whose trip
+  count is the grid-step product — plus named inner scopes from
+  ``jax.named_scope`` markers inside the kernel body (the flash
+  ``kv_block`` loop, the ssd ``sub_chunk`` loop).
+
+- **Instrumentation** (:func:`instrument_pallas`, the state merge hook
+  invoked by ``instrument.Instrumenter``): the datapath ``pallas_call``
+  is bound completely untouched (bit-identity is structural, not
+  asserted-after-the-fact); alongside it a ``lax.scan`` over the grid
+  steps replays the kernel body *cycles-only* and merges per-step
+  enter/exit events into the ordinary ``ProbeState``. The scan carry is
+  the "SMEM counter block" of a hardware deployment — a few scalar
+  counters accumulated across sequential grid steps and folded into the
+  global state at kernel exit. Because the rows land in the same state,
+  ``decode_record``, ``Report``, ``ProbeSession`` and
+  ``MeshProbeSession`` all see intra-kernel rows with zero API change.
+
+- **Replay** (:func:`oracle_pallas`, used by ``oracle.KernelOracle``):
+  the same walk with plain Python integers — integer equality of the
+  two is the Table-II exactness check, one level deeper.
+
+The cycles-only walk evaluates the kernel body jaxpr per grid step with
+a *scalar environment*: ``program_id`` resolves to the step's grid
+coordinates, pure scalar arithmetic on grid indices is evaluated for
+real, and anything touching a memory ref is opaque (costed statically).
+``pl.when`` regions therefore price the branch the hardware would
+actually take when the predicate is grid-derived (the causal-skip
+signal the DSE calibrator feeds on) and fall back to the widest branch
+when it is data-dependent. Only ``cycle_source="model"`` is supported —
+per-step wallclock timestamps inside one XLA op do not exist.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.extend import core
+
+from repro.core import costmodel as cm
+from repro.core.counters import U32, c64_add_u32
+
+_as_jaxpr = cm._as_jaxpr
+
+# sentinel for "not computable from grid indices alone"
+_OPAQUE = object()
+
+KERNEL_SEG = "kernel"          # path segment grouping kernels per scope
+GRID_SEG = "grid"              # the per-kernel grid loop node
+
+
+# ----------------------------------------------------------- eqn probing
+
+kernel_name = cm.pallas_kernel_name
+
+
+def static_grid(eqn) -> Optional[Tuple[int, ...]]:
+    """The call's grid as ints, or None when any dim is dynamic."""
+    gm = eqn.params.get("grid_mapping")
+    grid = tuple(getattr(gm, "grid", ()) or ())
+    out = []
+    for g in grid:
+        try:
+            out.append(int(g))
+        except (TypeError, ValueError):
+            return None
+    return tuple(out) if out else None
+
+
+def matches(kernel_probes: Sequence[str], name: str) -> bool:
+    return any(p == "*" or p == name for p in kernel_probes)
+
+
+# the cost model's per-step transfer term — one definition for both the
+# flat pricing and this walker, so calibration's DMA subtraction holds
+dma_cycles = cm.pallas_dma_cycles
+
+
+def unravel(it, grid: Tuple[int, ...]) -> List[Any]:
+    """Grid coordinates of sequential step ``it`` (last axis fastest —
+    the pallas sequential-grid iteration order). Works on traced values
+    and plain ints alike."""
+    idxs: List[Any] = []
+    rem = it
+    for g in reversed(grid):
+        idxs.append(rem % g)
+        rem = rem // g
+    return list(reversed(idxs))
+
+
+# ------------------------------------------------ extraction-time walk
+
+def extract_kernel_tree(eqn, node, ensure, eqn_info, counters,
+                        source_of) -> Optional[str]:
+    """Build the kernel subtree for one matched ``pallas_call``.
+
+    Registers ``EqnInfo`` rows for every body equation (paths under the
+    grid node, per-execution cycles) so the instrumenter and oracle
+    replay the same annotations the outer interpreter uses. Returns the
+    kernel node's path, or None when the grid is dynamic (the caller
+    then falls back to flat costing).
+    """
+    from repro.core.hierarchy import EqnInfo, normalize_stack
+
+    grid = static_grid(eqn)
+    if grid is None:
+        return None
+    kname = kernel_name(eqn)
+    kroot = ensure(node, KERNEL_SEG)
+    idx = counters.get(kroot.path + "#k", 0)
+    counters[kroot.path + "#k"] = idx + 1
+    knode = ensure(kroot, f"{kname}#{idx}", "kernel")
+    knode.source = knode.source or source_of(eqn)
+    gnode = ensure(knode, GRID_SEG, "loop")
+    steps = int(np.prod(grid)) if grid else 1
+    gnode.trip_count = steps
+    gnode.grid = grid
+    gnode.source = gnode.source or source_of(eqn)
+    # the per-step DMA is priced at the grid node itself
+    gnode.own_cycles += dma_cycles(eqn)
+    gnode.n_eqns += 1
+
+    def walk(jaxpr, prefix):
+        for e in jaxpr.eqns:
+            segs = normalize_stack(str(e.source_info.name_stack))
+            n = prefix
+            for s in segs:
+                n = ensure(n, s)
+                if not n.source:
+                    n.source = source_of(e)
+            name = e.primitive.name
+            if name == "cond":
+                # pl.when / lax.cond: priced as one leaf whose runtime
+                # cycles select the taken branch when the predicate is
+                # grid-derived; the static column keeps the widest
+                # branch (what the walker also charges for data-
+                # dependent predicates).
+                c = max(cm.static_jaxpr_cycles(_as_jaxpr(b))
+                        for b in e.params["branches"])
+                n.n_eqns += 1
+                n.own_cycles += c
+                eqn_info[id(e)] = EqnInfo(path=n.path, cycles=c)
+            elif name in ("scan", "while"):
+                c = cm.static_eqn_cycles(e)
+                n.n_eqns += 1
+                n.own_cycles += c
+                eqn_info[id(e)] = EqnInfo(path=n.path, cycles=c)
+            elif any(True for _ in cm._sub_jaxprs(e)):
+                # pjit wrappers (floor_divide, ...) — descend in place
+                eqn_info[id(e)] = EqnInfo(path=n.path)
+                walk(_as_jaxpr(next(iter(cm._sub_jaxprs(e)))), n)
+            else:
+                c = cm.eqn_cost(e).cycles
+                n.n_eqns += 1
+                n.own_cycles += c
+                eqn_info[id(e)] = EqnInfo(path=n.path, cycles=c)
+
+    walk(_as_jaxpr(eqn.params["jaxpr"]), gnode)
+    return knode.path
+
+
+# ------------------------------------------------------ cycles-only walk
+#
+# One walk, two modes. ``ops`` supplies the mode-specific pieces:
+#   zero()            -> additive identity for pending cycles
+#   add(a, b)         -> accumulate (int or traced)
+#   select(i, opts)   -> opts[i] for a scalar index (traced or int)
+#   advance(v)        -> fold pending cycles into the clock
+#   transition(a, b)  -> probed-scope delta events between paths
+
+class _WalkOps:
+    def zero(self):
+        return 0
+
+    def add(self, a, b):
+        return a + b
+
+
+class DeviceOps(_WalkOps):
+    """Traced-mode ops mutating a boxed ProbeState."""
+
+    def __init__(self, instr, box):
+        self.instr = instr
+        self.box = box
+
+    def add(self, a, b):
+        if isinstance(a, int) and isinstance(b, int):
+            return a + b
+        return jnp.asarray(a, U32) + jnp.asarray(b, U32)
+
+    def select(self, i, opts: Sequence[int]):
+        idx = jnp.clip(jnp.asarray(i, jnp.int32), 0, len(opts) - 1)
+        return jnp.asarray(np.asarray(opts, np.uint32))[idx]
+
+    def advance(self, v):
+        if isinstance(v, int):
+            if v:
+                self.box[0] = self.instr.src.advance(self.box[0], v)
+            return
+        st = dict(self.box[0])
+        st["cycle"] = c64_add_u32(st["cycle"], v)
+        self.box[0] = st
+
+    def transition(self, a, b):
+        self.box[0] = self.instr._transition(self.box[0], a, b)
+
+
+class OracleOps(_WalkOps):
+    """Concrete-mode ops mutating OracleCounters."""
+
+    def __init__(self, orc, st):
+        self.orc = orc
+        self.st = st
+
+    def add(self, a, b):
+        return int(a) + int(b)
+
+    def select(self, i, opts: Sequence[int]):
+        return opts[int(np.clip(int(np.asarray(i)), 0, len(opts) - 1))]
+
+    def advance(self, v):
+        self.st.cycle += int(v)
+
+    def transition(self, a, b):
+        self.orc._transition(self.st, a, b)
+
+
+def _scalar_eval(eqn, invals):
+    """Concretely evaluate a pure scalar equation; _OPAQUE on failure."""
+    try:
+        outs = eqn.primitive.bind(*invals, **eqn.params)
+    except Exception:
+        return None
+    return outs if isinstance(outs, (list, tuple)) else [outs]
+
+
+def walk_step(hierarchy, body_jaxpr, grid: Tuple[int, ...], it,
+              ops: _WalkOps, entry_path: str) -> None:
+    """Replay the cycles of ONE grid step of a kernel body.
+
+    Scalar values derived from the step's grid coordinates are computed
+    for real (so ``pl.when`` predicates select the taken branch);
+    everything else is opaque and statically priced via the ``EqnInfo``
+    rows registered at extraction. Scope transitions fire exactly like
+    the outer interpreter's — enters/exits at path deltas with the
+    pending segment cost flushed first.
+    """
+    idxs = unravel(it, grid)
+    eqn_info = hierarchy.eqn_info
+
+    def run(jaxpr, entry: str, env: Dict[Any, Any]):
+        cur = entry
+        pending = ops.zero()
+
+        def flush():
+            nonlocal pending
+            ops.advance(pending)
+            pending = ops.zero()
+
+        def read(v):
+            if isinstance(v, core.Literal):
+                return v.val
+            return env.get(v, _OPAQUE)
+
+        for e in jaxpr.eqns:
+            info = eqn_info.get(id(e))
+            path = info.path if info else cur
+            if path != cur:
+                flush()
+                ops.transition(cur, path)
+                cur = path
+            name = e.primitive.name
+            invals = [read(v) for v in e.invars]
+            avail = all(v is not _OPAQUE for v in invals)
+            cost = info.cycles if info else None
+            if name == "program_id":
+                pending = ops.add(pending, cost if cost is not None
+                                  else cm.eqn_cost(e).cycles)
+                env[e.outvars[0]] = idxs[int(e.params["axis"])]
+            elif name == "num_programs":
+                pending = ops.add(pending, cost if cost is not None
+                                  else cm.eqn_cost(e).cycles)
+                env[e.outvars[0]] = grid[int(e.params["axis"])]
+            elif name == "cond":
+                branch_cycles = [cm.static_jaxpr_cycles(_as_jaxpr(b))
+                                 for b in e.params["branches"]]
+                # only the branch index needs resolving — the remaining
+                # operands are the (opaque) refs the branches touch
+                if invals and invals[0] is not _OPAQUE:
+                    pending = ops.add(pending,
+                                      ops.select(invals[0], branch_cycles))
+                else:
+                    pending = ops.add(pending, max(branch_cycles))
+                for v in e.outvars:
+                    env[v] = _OPAQUE
+            elif name in ("scan", "while"):
+                pending = ops.add(pending, cost if cost is not None
+                                  else cm.static_eqn_cycles(e))
+                for v in e.outvars:
+                    env[v] = _OPAQUE
+            elif (sub := next(iter(cm._sub_jaxprs(e)), None)) is not None:
+                if avail:
+                    sj = _as_jaxpr(sub)
+                    consts = sub.consts if hasattr(sub, "consts") else []
+                    sub_env = dict(zip(sj.constvars, consts))
+                    sub_env.update(zip(sj.invars, invals))
+                    flush()
+                    run(sj, cur, sub_env)
+                    for vo, vi in zip(e.outvars, sj.outvars):
+                        env[vo] = vi.val if isinstance(vi, core.Literal) \
+                            else sub_env.get(vi, _OPAQUE)
+                else:
+                    pending = ops.add(pending, cm.static_eqn_cycles(e))
+                    for v in e.outvars:
+                        env[v] = _OPAQUE
+            else:
+                pending = ops.add(pending, cost if cost is not None
+                                  else cm.eqn_cost(e).cycles)
+                outs = None
+                if avail and all(getattr(v.aval, "shape", None) == ()
+                                 for v in e.outvars):
+                    outs = _scalar_eval(e, invals)
+                if outs is not None:
+                    for v, o in zip(e.outvars, outs):
+                        env[v] = o
+                else:
+                    # memory-ref invars never resolve, so anything
+                    # derived from tile data stays opaque by construction
+                    for v in e.outvars:
+                        env[v] = _OPAQUE
+        flush()
+        ops.transition(cur, entry)
+
+    env0: Dict[Any, Any] = {v: _OPAQUE for v in body_jaxpr.invars}
+    run(body_jaxpr, entry_path, env0)
+
+
+# --------------------------------------------------- instrumenter hook
+
+def probed_kernel_path(instr, eqn, info) -> Optional[str]:
+    """The kernel node path when this pallas_call was descended at
+    extraction (the signal that the walk — not flat costing — owns its
+    cycles), else None."""
+    if info is None or not info.sub_path:
+        return None
+    node = instr.h.node(info.sub_path)
+    if node is None or node.kind != "kernel":
+        return None
+    return info.sub_path
+
+
+def instrument_pallas(instr, eqn, invals, state, info, cur_path: str):
+    """State merge hook for a descended ``pallas_call``.
+
+    Binds the original equation untouched (datapath bit-identity), then
+    scans a cycles-only replica over the grid steps: per step the grid
+    probe enters, the DMA + executed-path body cycles advance the model
+    clock (with inner-scope events), and the grid probe exits. The scan
+    carry — the ProbeState — is the counter block merged back into the
+    caller's state at kernel exit.
+    """
+    if instr.src.kind != "model":
+        raise ValueError("kernel_probes require cycle_source='model' — "
+                         "grid steps inside one XLA op have no host "
+                         "timestamps")
+    outs = eqn.primitive.bind(*invals, **eqn.params)
+    if not isinstance(outs, (list, tuple)):
+        outs = [outs]
+    kpath = info.sub_path
+    gpath = f"{kpath}/{GRID_SEG}"
+    body = _as_jaxpr(eqn.params["jaxpr"])
+    grid = static_grid(eqn)
+    steps = int(np.prod(grid)) if grid else 1
+    dma = dma_cycles(eqn)
+
+    state = instr._transition(state, cur_path, kpath)
+
+    def step_fn(st, it):
+        box = [st]
+        ops = DeviceOps(instr, box)
+        ops.transition(kpath, gpath)
+        ops.advance(dma)
+        walk_step(instr.h, body, grid, it, ops, gpath)
+        ops.transition(gpath, kpath)
+        return box[0], None
+
+    state, _ = jax.lax.scan(step_fn, state,
+                            jnp.arange(steps, dtype=jnp.int32))
+    state = instr._transition(state, kpath, cur_path)
+    return state, list(outs)
+
+
+# -------------------------------------------------------- oracle hook
+
+def oracle_pallas(orc, eqn, invals, st, info, cur_path: str):
+    """Python-integer replay of a descended ``pallas_call`` — the
+    KernelOracle side of the Table-II equality, one grid step at a
+    time."""
+    outs = eqn.primitive.bind(*invals, **eqn.params)
+    if not isinstance(outs, (list, tuple)):
+        outs = [outs]
+    kpath = info.sub_path
+    gpath = f"{kpath}/{GRID_SEG}"
+    body = _as_jaxpr(eqn.params["jaxpr"])
+    grid = static_grid(eqn)
+    steps = int(np.prod(grid)) if grid else 1
+    dma = dma_cycles(eqn)
+
+    orc._transition(st, cur_path, kpath)
+    ops = OracleOps(orc, st)
+    for it in range(steps):
+        ops.transition(kpath, gpath)
+        ops.advance(dma)
+        walk_step(orc.h, body, grid, it, ops, gpath)
+        ops.transition(gpath, kpath)
+    orc._transition(st, kpath, cur_path)
+    return list(outs)

@@ -326,7 +326,9 @@ class MeshProbedFunction:
                 cm.collective_axis_sizes(self.axis_sizes):
             self._closed = jax.make_jaxpr(flat_fn)(*shard_avals)
             t1 = time.perf_counter()
-            self._hierarchy = extract(self._closed)
+            self._hierarchy = extract(
+                self._closed,
+                kernel_probes=tuple(self.config.kernel_probes))
         self._out_tree = store["out_tree"]
         out_template = jax.tree_util.tree_unflatten(
             self._out_tree, [v.aval for v in self._closed.jaxpr.outvars])

@@ -21,6 +21,7 @@ from jax.extend import core
 from jax._src.core import eval_jaxpr as _eval_jaxpr
 
 from repro.core import costmodel as cm
+from repro.core import kernelprobe
 from repro.core.hierarchy import Hierarchy
 from repro.core.instrument import ProbeAssignment
 
@@ -144,6 +145,11 @@ class Oracle:
                 outs = self._while(eqn, invals, st, info)
             elif name == "cond":
                 outs = self._cond(eqn, invals, st, info)
+            elif (name == "pallas_call" and
+                  kernelprobe.probed_kernel_path(self, eqn, info)):
+                # descended kernel: replay grid steps with Python ints
+                outs = kernelprobe.oracle_pallas(self, eqn, invals, st,
+                                                 info, cur)
             elif name in ("pjit", "jit", "closed_call", "core_call",
                           "custom_jvp_call", "custom_vjp_call",
                           "custom_vjp_call_jaxpr", "remat", "remat2",
@@ -233,3 +239,25 @@ class Oracle:
         cond_path = info.sub_path
         return self._eval(br.jaxpr, br.consts, list(ops), st,
                           f"{cond_path}/branch{bi}" if cond_path else "")
+
+
+class KernelOracle(Oracle):
+    """Interpret-mode grid-step replay oracle.
+
+    The base :class:`Oracle` already replays descended ``pallas_call``
+    equations grid step by grid step (``kernelprobe.oracle_pallas``)
+    whenever the hierarchy was extracted with ``kernel_probes``; this
+    alias names that capability for kernel-level validation and adds a
+    direct per-kernel replay helper used by the conformance tests.
+    """
+
+    def grid_totals(self, counters: OracleCounters,
+                    paths: Tuple[str, ...]) -> Dict[str, int]:
+        """Per-grid-probe total cycles from a replay (paths ending in
+        ``/grid``), keyed by path — convenience for asserting the
+        sum-of-grid-steps == kernel-scope invariant."""
+        out: Dict[str, int] = {}
+        for pid, p in enumerate(paths):
+            if p.endswith("/" + kernelprobe.GRID_SEG):
+                out[p] = counters.totals[pid]
+        return out

@@ -41,6 +41,10 @@ class ProbeConfig:
                                           # 0/25/50/75% dump ratios)
     cycle_source: str = "model"           # model | wallclock
     inline: str = "default"               # default | off_all | off_top
+    kernel_probes: Tuple[str, ...] = ()   # pallas kernel body names to
+                                          # probe inside ("*" = all);
+                                          # empty = kernels stay flat
+                                          # leaves (seed behavior)
 
     def replace(self, **kw) -> "ProbeConfig":
         return dataclasses.replace(self, **kw)
@@ -82,6 +86,8 @@ class ProbedFunction:
         self.sink = HostSink()
         self._hierarchy: Optional[Hierarchy] = None
         self._trace_key = None
+        self._closed = None
+        self._kernel_key = None
         self._assignment: Optional[ProbeAssignment] = None
         self._jitted = None
         self._jitted_stateful = None
@@ -92,16 +98,22 @@ class ProbedFunction:
         key = jax.tree_util.tree_structure((args, kwargs)), tuple(
             (a.shape, str(a.dtype)) for a in jax.tree_util.tree_leaves(
                 (args, kwargs)) if hasattr(a, "shape"))
-        if self._hierarchy is None or key != self._trace_key:
+        kkey = tuple(self.config.kernel_probes)
+        if self._closed is None or key != self._trace_key:
             t0 = time.perf_counter()
-            closed = jax.make_jaxpr(self.fn)(*args, **kwargs)
+            self._closed = jax.make_jaxpr(self.fn)(*args, **kwargs)
             self._out_tree = jax.tree_util.tree_structure(
                 jax.eval_shape(self.fn, *args, **kwargs))
-            t1 = time.perf_counter()
-            self._hierarchy = extract(closed)
             self._trace_key = key
+            self._hierarchy = None
+            self.timings["trace_s"] = time.perf_counter() - t0
+        if self._hierarchy is None or kkey != self._kernel_key:
+            # kernel descent is part of extraction, not tracing — a
+            # retarget that flips kernel_probes reuses the cached trace
+            t1 = time.perf_counter()
+            self._hierarchy = extract(self._closed, kernel_probes=kkey)
+            self._kernel_key = kkey
             self._jitted = None
-            self.timings["trace_s"] = t1 - t0
             self.timings["extract_s"] = time.perf_counter() - t1
         return self._hierarchy
 
@@ -113,6 +125,10 @@ class ProbedFunction:
 
     # -- stage 3: RealProbe IP generation --------------------------------
     def _build(self, *args, **kwargs):
+        if self.config.kernel_probes and self.config.cycle_source != "model":
+            raise ValueError("kernel_probes require cycle_source='model': "
+                             "grid steps execute inside one XLA op, so "
+                             "there is no host timestamp per step")
         h = self.trace(*args, **kwargs)
         t0 = time.perf_counter()
         paths = _select_probes(h, self.config)

@@ -16,6 +16,16 @@ from typing import Any, Dict, Iterable, Optional, Tuple
 import jax
 
 
+def supports_partial_manual() -> bool:
+    """True when this jax can run partial-manual ``shard_map`` (a
+    subset of mesh axes manual, the rest auto-sharded inside). The
+    0.4.x line cannot — its SPMD partitioner aborts on the resulting
+    ``CustomCallSharding`` (a hard ``Check failed`` in XLA, not a
+    catchable exception) — so callers get the full-manual fallback
+    below instead."""
+    return hasattr(jax, "shard_map")
+
+
 def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
               check_vma: Optional[bool] = None,
               check_rep: Optional[bool] = None):
@@ -23,11 +33,19 @@ def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
 
     ``axis_names`` restricts manual axes (the rest stay auto-sharded);
     ``check_vma`` / ``check_rep`` are the new/old names for the same
-    replication check. On old jax the restriction is translated to the
-    ``auto=`` complement set.
-    """
+    replication check.
+
+    On jax 0.4.x a partial-manual request falls back to a FULL-manual
+    region with the same in/out specs: the named collectives still see
+    exactly the manual axes they ask for, and axes absent from a spec
+    are simply replicated into the body instead of auto-partitioned —
+    identical math, less automatic parallelism inside the region. GSPMD
+    sharding constraints are meaningless inside a fully-manual region,
+    so the repo's logical-axis rules are suspended while the body
+    traces (they would otherwise emit constraints the old partitioner
+    rejects)."""
     check = check_vma if check_vma is not None else check_rep
-    if hasattr(jax, "shard_map"):
+    if supports_partial_manual():        # the modern jax.shard_map path
         kw: Dict[str, Any] = {}
         if axis_names is not None:
             kw["axis_names"] = set(axis_names)
@@ -36,12 +54,23 @@ def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
         return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
                              out_specs=out_specs, **kw)
     from jax.experimental.shard_map import shard_map as _sm
+    body = f
+    partial = axis_names is not None and \
+        frozenset(mesh.axis_names) - set(axis_names)
+    if partial:
+        from repro.distributed import sharding as _shd
+
+        def body(*args, **kwargs):
+            with _shd.axis_rules(None):
+                return f(*args, **kwargs)
+        # full-manual: replication of the formerly-auto axes cannot be
+        # checked by the old rep machinery either, so force it off
+        check = False
     kw = {}
-    if axis_names is not None:
-        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
     if check is not None:
         kw["check_rep"] = bool(check)
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    return _sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               **kw)
 
 
 def mesh_context(mesh):

@@ -47,67 +47,75 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, probe_ref,
     ng = pl.num_programs(3)
     nk = ng * pipeline               # total kv blocks
 
-    @pl.when(ig == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        if with_probe:
-            probe_ref[...] = jnp.zeros_like(probe_ref)
+    # named scopes below are RealProbe grid-step markers: pure trace
+    # metadata (the emitted equations are identical with probing off),
+    # picked up by hierarchy extraction under ProbeConfig(kernel_probes)
+    with jax.named_scope("init"):
+        @pl.when(ig == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            if with_probe:
+                probe_ref[...] = jnp.zeros_like(probe_ref)
 
     # each grid step fetches `pipeline` kv blocks in one DMA group and
     # runs the MXU tiles over them back to back (statically unrolled)
     for p in range(pipeline):
-        ik = ig * pipeline + p
-        # causal skip decided by the q block's LAST row: any kv block
-        # starting at or before it intersects the causal triangle
-        should_compute = ((iq + 1) * block_q - 1 >= ik * block_k) \
-            if causal else True
+        with jax.named_scope("kv_block"):
+            ik = ig * pipeline + p
+            # causal skip decided by the q block's LAST row: any kv block
+            # starting at or before it intersects the causal triangle
+            should_compute = ((iq + 1) * block_q - 1 >= ik * block_k) \
+                if causal else True
 
-        if with_probe:
-            # control-event counters: [0]=blocks visited, [1]=blocks computed
-            probe_ref[0, 0, 0, 0] += 1
-            probe_ref[0, 0, 0, 1] += jnp.where(should_compute, 1, 0).astype(
-                probe_ref.dtype)
+            if with_probe:
+                # control-event counters: [0]=blocks visited,
+                # [1]=blocks computed
+                probe_ref[0, 0, 0, 0] += 1
+                probe_ref[0, 0, 0, 1] += jnp.where(
+                    should_compute, 1, 0).astype(probe_ref.dtype)
 
-        @pl.when(should_compute)
-        def _compute(p=p, ik=ik):
-            q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
-            k = k_ref[0, 0, p * block_k:(p + 1) * block_k].astype(
-                jnp.float32)                               # (bk, D)
-            s = jax.lax.dot_general(
-                q, k, (((1,), (1,)), ((), ())),
-                preferred_element_type=jnp.float32) * sm_scale  # (bq, bk)
-            if causal:
-                q_pos = iq * block_q + jax.lax.broadcasted_iota(
-                    jnp.int32, (block_q, block_k), 0)
-                k_pos = ik * block_k + jax.lax.broadcasted_iota(
-                    jnp.int32, (block_q, block_k), 1)
-                s = jnp.where(q_pos >= k_pos, s, NEG_INF)
-            m_prev = m_ref[...]
-            m_new = jnp.maximum(m_prev, s.max(axis=-1))
-            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
-            p_ = jnp.exp(s - m_safe[:, None])
-            corr = jnp.where(jnp.isneginf(m_prev), 0.0,
-                             jnp.exp(m_prev - m_safe))
-            l_ref[...] = l_ref[...] * corr + p_.sum(axis=-1)
-            v = v_ref[0, 0, p * block_k:(p + 1) * block_k].astype(
-                jnp.float32)                               # (bk, D)
-            pv = jax.lax.dot_general(
-                p_, v, (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
-            acc_ref[...] = acc_ref[...] * corr[:, None] + pv
-            m_ref[...] = m_new
+            @pl.when(should_compute)
+            def _compute(p=p, ik=ik):
+                q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+                k = k_ref[0, 0, p * block_k:(p + 1) * block_k].astype(
+                    jnp.float32)                               # (bk, D)
+                s = jax.lax.dot_general(
+                    q, k, (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32) * sm_scale
+                if causal:
+                    q_pos = iq * block_q + jax.lax.broadcasted_iota(
+                        jnp.int32, (block_q, block_k), 0)
+                    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+                        jnp.int32, (block_q, block_k), 1)
+                    s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+                m_prev = m_ref[...]
+                m_new = jnp.maximum(m_prev, s.max(axis=-1))
+                m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+                p_ = jnp.exp(s - m_safe[:, None])
+                corr = jnp.where(jnp.isneginf(m_prev), 0.0,
+                                 jnp.exp(m_prev - m_safe))
+                l_ref[...] = l_ref[...] * corr + p_.sum(axis=-1)
+                v = v_ref[0, 0, p * block_k:(p + 1) * block_k].astype(
+                    jnp.float32)                               # (bk, D)
+                pv = jax.lax.dot_general(
+                    p_, v, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+                m_ref[...] = m_new
 
-    # last group holding the causal diagonal of this q block — based on
-    # the block's LAST row (its first row under-counts when bq > bk)
-    last_g = (jnp.minimum(((iq + 1) * block_q - 1) // block_k, nk - 1)
-              // pipeline) if causal else ng - 1
+    with jax.named_scope("finalize"):
+        # last group holding the causal diagonal of this q block — based
+        # on the block's LAST row (its first row under-counts when
+        # bq > bk)
+        last_g = (jnp.minimum(((iq + 1) * block_q - 1) // block_k, nk - 1)
+                  // pipeline) if causal else ng - 1
 
-    @pl.when(ig == last_g)
-    def _finalize():
-        l = jnp.maximum(l_ref[...], 1e-37)
-        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        @pl.when(ig == last_g)
+        def _finalize():
+            l = jnp.maximum(l_ref[...], 1e-37)
+            o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
 
 
 def flash_attention(q, k, v, *, causal: bool = True,

@@ -34,9 +34,12 @@ def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_scratch,
                 *, chunk: int, pipeline: int):
     ci = pl.program_id(2)
 
-    @pl.when(ci == 0)
-    def _init():
-        state_scratch[...] = jnp.zeros_like(state_scratch)
+    # named scopes are RealProbe grid-step markers (trace metadata only;
+    # identical equations with probing off) — see core.kernelprobe
+    with jax.named_scope("init"):
+        @pl.when(ci == 0)
+        def _init():
+            state_scratch[...] = jnp.zeros_like(state_scratch)
 
     # the VMEM tile is `chunk` long; the quadratic intra-chunk term is
     # evaluated over `pipeline` sub-chunks of length Q = chunk/pipeline,
@@ -44,34 +47,37 @@ def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_scratch,
     # unchanged DMA granularity
     sub = chunk // pipeline
     for p in range(pipeline):
-        lo, hi = p * sub, (p + 1) * sub
-        x = x_ref[0, 0, lo:hi].astype(jnp.float32)     # (Q, P)
-        a = a_ref[0, 0, lo:hi].astype(jnp.float32)     # (Q,)
-        b = b_ref[0, 0, lo:hi].astype(jnp.float32)     # (Q, N)
-        c = c_ref[0, 0, lo:hi].astype(jnp.float32)     # (Q, N)
+        with jax.named_scope("sub_chunk"):
+            lo, hi = p * sub, (p + 1) * sub
+            x = x_ref[0, 0, lo:hi].astype(jnp.float32)     # (Q, P)
+            a = a_ref[0, 0, lo:hi].astype(jnp.float32)     # (Q,)
+            b = b_ref[0, 0, lo:hi].astype(jnp.float32)     # (Q, N)
+            c = c_ref[0, 0, lo:hi].astype(jnp.float32)     # (Q, N)
 
-        a_cs = jnp.cumsum(a)                           # (Q,)
-        # intra-chunk: y_diag[q] = sum_{k<=q} exp(a_cs[q]-a_cs[k]) (c_q.b_k) x_k
-        cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
-                                 preferred_element_type=jnp.float32)  # (Q, Q)
-        seg = a_cs[:, None] - a_cs[None, :]
-        qi = jax.lax.broadcasted_iota(jnp.int32, (sub, sub), 0)
-        ki = jax.lax.broadcasted_iota(jnp.int32, (sub, sub), 1)
-        decay = jnp.where(qi >= ki, jnp.exp(seg), 0.0)
-        y_diag = jax.lax.dot_general(cb * decay, x, (((1,), (0,)), ((), ())),
+            a_cs = jnp.cumsum(a)                           # (Q,)
+            # intra-chunk:
+            #   y_diag[q] = sum_{k<=q} exp(a_cs[q]-a_cs[k]) (c_q.b_k) x_k
+            cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
                                      preferred_element_type=jnp.float32)
-        # inter-chunk: y_off[q] = exp(a_cs[q]) * c_q . state  (state: (P, N))
-        state = state_scratch[...]
-        y_off = jax.lax.dot_general(c, state, (((1,), (1,)), ((), ())),
-                                    preferred_element_type=jnp.float32)
-        y_off = y_off * jnp.exp(a_cs)[:, None]
-        y_ref[0, 0, lo:hi] = (y_diag + y_off).astype(y_ref.dtype)
-        # state update: state' = exp(a_cs[-1]) * state + sum_k d_k x_k b_k^T
-        decay_states = jnp.exp(a_cs[-1] - a_cs)        # (Q,)
-        xb = jax.lax.dot_general(x * decay_states[:, None], b,
-                                 (((0,), (0,)), ((), ())),
-                                 preferred_element_type=jnp.float32)  # (P, N)
-        state_scratch[...] = state * jnp.exp(a_cs[-1]) + xb
+            seg = a_cs[:, None] - a_cs[None, :]
+            qi = jax.lax.broadcasted_iota(jnp.int32, (sub, sub), 0)
+            ki = jax.lax.broadcasted_iota(jnp.int32, (sub, sub), 1)
+            decay = jnp.where(qi >= ki, jnp.exp(seg), 0.0)
+            y_diag = jax.lax.dot_general(cb * decay, x,
+                                         (((1,), (0,)), ((), ())),
+                                         preferred_element_type=jnp.float32)
+            # inter-chunk: y_off[q] = exp(a_cs[q]) * c_q . state ((P, N))
+            state = state_scratch[...]
+            y_off = jax.lax.dot_general(c, state, (((1,), (1,)), ((), ())),
+                                        preferred_element_type=jnp.float32)
+            y_off = y_off * jnp.exp(a_cs)[:, None]
+            y_ref[0, 0, lo:hi] = (y_diag + y_off).astype(y_ref.dtype)
+            # state': exp(a_cs[-1]) * state + sum_k d_k x_k b_k^T
+            decay_states = jnp.exp(a_cs[-1] - a_cs)        # (Q,)
+            xb = jax.lax.dot_general(x * decay_states[:, None], b,
+                                     (((0,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+            state_scratch[...] = state * jnp.exp(a_cs[-1]) + xb
 
 
 def ssd_scan(x, a, b, c, *, chunk: int = 256, pipeline: int = 1,

@@ -13,6 +13,27 @@ def key():
     return jax.random.PRNGKey(0)
 
 
+@pytest.fixture(scope="session")
+def tiny_model():
+    """Shared tinyllama smoke model: (cfg, model, params), initialized
+    once per session. Model init dominates several probe/system tests;
+    params are jax arrays (immutable), so session sharing is safe."""
+    from repro.configs.registry import smoke_config
+    from repro.models import Model
+    cfg = smoke_config("tinyllama-1.1b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="session")
+def tiny_mesh():
+    """Shared 1-device probe mesh (the fast in-process mesh tests all
+    build the same one)."""
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1,), ("dev",))
+
+
 def tiny_batch(cfg, B=2, S=64, seed=0):
     k = jax.random.PRNGKey(seed)
     from repro.models.frontends import synth_frontend_batch

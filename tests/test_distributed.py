@@ -118,12 +118,11 @@ print(json.dumps({"l1": float(l1), "l2": float(l2)}))
     assert abs(out["l1"] - out["l2"]) / abs(out["l1"]) < 5e-3, out
 
 
-@pytest.mark.skipif(not hasattr(__import__("jax"), "shard_map"),
-                    reason="partial-manual shard_map (auto data/model axes) "
-                           "crashes the SPMD partitioner on jax 0.4.x")
 def test_int8_ef_grad_compression_pod_axis():
     """Compressed cross-pod exchange: loss finite, params update, and
-    the result stays close to the uncompressed step."""
+    the result stays close to the uncompressed step. On jax 0.4.x this
+    exercises compat.shard_map's full-manual fallback (partial-manual
+    regions abort the old SPMD partitioner)."""
     code = PREAMBLE + """
 from repro.optim import compression
 cfg = smoke_config("tinyllama-1.1b").replace(compute_dtype="float32")

@@ -1,0 +1,63 @@
+"""Golden-record conformance: decoded probe records must match the
+committed canonical JSON bit for bit (tools/regen_golden.py).
+
+This is the regression net under the profiler's exactness contracts:
+probe selection order, event ordering, cost-model pricing, ring/spill
+layout and the intra-kernel grid-step rows all feed the record, so any
+drift — intended or not — surfaces as a JSON diff here. Records depend
+on the traced jaxpr and therefore the jax version; the committed files
+carry the version they were generated with (the CI baseline pin) and
+the test skips elsewhere (the pinned nightly matrix keeps it running).
+"""
+import json
+import os
+import sys
+
+import jax
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import regen_golden  # noqa: E402
+
+
+def _load(name):
+    path = regen_golden.golden_path(name)
+    if not os.path.exists(path):
+        pytest.fail(f"missing golden record {path} — run "
+                    f"PYTHONPATH=src python tools/regen_golden.py")
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name", sorted(regen_golden.CASES))
+def test_golden_record_exact(name):
+    golden = _load(name)
+    if golden["jax"] != jax.__version__:
+        pytest.skip(f"golden for jax {golden['jax']}, running "
+                    f"{jax.__version__} — regenerate under the pin to "
+                    f"compare")
+    got = json.loads(regen_golden.encode(regen_golden.run_case(name)))
+    assert got == golden, (
+        f"decoded record for {name!r} drifted from tests/golden/ — "
+        f"inspect with `python tools/regen_golden.py --diff --case {name}` "
+        f"and regenerate if the change is intentional")
+
+
+def test_golden_two_consecutive_runs_identical():
+    """Decode determinism: two fresh builds of the same case produce
+    byte-identical canonical records (no trace-order or id() leakage
+    into the record)."""
+    a = regen_golden.encode(regen_golden.run_case("flash_grid"))
+    b = regen_golden.encode(regen_golden.run_case("flash_grid"))
+    assert a == b
+
+
+def test_golden_covers_kernel_rows():
+    """The committed kernel cases must actually pin intra-kernel rows —
+    a regen that silently loses the grid subtree should fail loudly."""
+    for name in ("flash_grid", "ssd_grid"):
+        golden = _load(name)
+        assert any(p.endswith("/grid") for p in golden["paths"]), name
+        assert any("/kernel/" in p for p in golden["paths"]), name

@@ -1,0 +1,343 @@
+"""Intra-kernel grid-step probing (core.kernelprobe).
+
+The Table-II exactness contract, one level below the jaxpr: for every
+probed ``pallas_call`` the device-side grid-step counters must equal
+the ``KernelOracle``'s Python-integer replay EXACTLY, the datapath must
+stay bit-identical probed vs unprobed, and the kernel subtree must obey
+sum-of-grid-steps == kernel-scope totals. Exhaustive block/pipeline
+sweeps are ``slow``; the fast subset keeps one representative per
+kernel."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (KernelOracle, ProbeConfig, ProbeSession,
+                        kernel_grid_heat, kernel_grid_table, probe)
+from repro.core.counters import c64_to_int
+from repro.kernels import flash_attention as fa
+from repro.kernels import ssd_scan as ssdk
+
+
+def _flash_args(B=1, H=2, S=128, D=32, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(k1, (B, H, S, D)),
+            jax.random.normal(k2, (B, H, S, D)),
+            jax.random.normal(k3, (B, H, S, D)))
+
+
+def _flash_fn(bq, bk, pp=1, causal=True):
+    def fn(q, k, v):
+        with jax.named_scope("attn"):
+            return fa.flash_attention(q, k, v, causal=causal, block_q=bq,
+                                      block_k=bk, pipeline=pp,
+                                      interpret=True)
+    return fn
+
+
+def _ssd_args(B=1, H=2, L=128, P=16, N=32, G=2, seed=1):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return (jax.random.normal(ks[0], (B, H, L, P)) * 0.5,
+            -jnp.abs(jax.random.normal(ks[1], (B, H, L))) * 0.3,
+            jax.random.normal(ks[2], (B, G, L, N)) * 0.5,
+            jax.random.normal(ks[3], (B, G, L, N)) * 0.5)
+
+
+def _ssd_fn(chunk, pp=1):
+    def fn(x, a, b, c):
+        with jax.named_scope("ssd"):
+            return ssdk.ssd_scan(x, a, b, c, chunk=chunk, pipeline=pp,
+                                 interpret=True)
+    return fn
+
+
+KCFG = ProbeConfig(inline="off_all", kernel_probes=("*",))
+
+
+def _decoded(rec):
+    return (np.atleast_1d(c64_to_int(np.asarray(rec["totals"]))),
+            np.asarray(rec["calls"]).astype(np.int64))
+
+
+def _assert_oracle_exact(pf, rec, oc):
+    totals, calls = _decoded(rec)
+    for i, p in enumerate(pf.probe_paths()):
+        assert int(totals[i]) == oc.totals[i], p
+        assert int(calls[i]) == oc.calls[i], p
+        assert int(c64_to_int(np.asarray(rec["starts"][i]))) == oc.starts[i], p
+        assert int(c64_to_int(np.asarray(rec["ends"][i]))) == oc.ends[i], p
+    assert int(c64_to_int(np.asarray(rec["cycle"]))) == oc.cycle
+
+
+def _assert_grid_invariants(pf, rec):
+    """kernel totals == grid totals; grid calls == steps x kernel calls."""
+    totals, calls = _decoded(rec)
+    paths = list(pf.probe_paths())
+    h = pf.hierarchy
+    seen = 0
+    for i, p in enumerate(paths):
+        node = h.node(p)
+        if node is None or node.kind != "kernel":
+            continue
+        seen += 1
+        gp = p + "/grid"
+        gi = paths.index(gp)
+        gnode = h.node(gp)
+        assert int(totals[i]) == int(totals[gi]), p
+        assert int(calls[gi]) == int(np.prod(gnode.grid)) * int(calls[i]), p
+        # inner scopes never exceed their grid parent
+        for j, q in enumerate(paths):
+            if q.startswith(gp + "/"):
+                assert int(totals[j]) <= int(totals[gi]), q
+    assert seen, "no kernel nodes probed"
+
+
+# ------------------------------------------------------------ fast set
+
+def test_flash_grid_probe_exact_and_bit_identical():
+    fn = _flash_fn(64, 64)
+    args = _flash_args()
+    pf = probe(fn, KCFG)
+    out, rec = pf(*args)
+    assert jnp.array_equal(out, jax.jit(fn)(*args))      # bit-identity
+    _assert_oracle_exact(pf, rec, pf.oracle(*args))
+    _assert_grid_invariants(pf, rec)
+    assert any(p.endswith("/grid/kv_block") for p in pf.probe_paths())
+
+
+def test_ssd_grid_probe_exact_and_bit_identical():
+    fn = _ssd_fn(32, pp=2)
+    args = _ssd_args()
+    pf = probe(fn, KCFG)
+    out, rec = pf(*args)
+    assert jnp.array_equal(out, jax.jit(fn)(*args))
+    _assert_oracle_exact(pf, rec, pf.oracle(*args))
+    _assert_grid_invariants(pf, rec)
+    assert any(p.endswith("/grid/sub_chunk") for p in pf.probe_paths())
+
+
+def test_causal_skip_shows_in_grid_steps():
+    """Measured per-step cycles must expose the causal triangle — the
+    signal the flat cost model cannot see (and what DSE calibration
+    feeds on): skipped (iq, ik) tiles are cheaper than computed ones."""
+    fn = _flash_fn(64, 64)
+    pf = probe(fn, KCFG.replace(offload=1.0, buffer_depth=4))
+    _, rec = pf(*_flash_args())
+    rep = pf.report(rec)
+    grid_row = next(r for r in rep.rows if r.path.endswith("/grid"))
+    durs = [e - s for s, e in grid_row.iters]
+    assert len(durs) == grid_row.calls                  # full history
+    assert max(durs) > min(durs)                        # skew exists
+    assert sum(durs) == grid_row.total_cycles           # lossless
+    table = kernel_grid_table(pf.hierarchy, rep)
+    heat = kernel_grid_heat(pf.hierarchy, rep)
+    assert "skew" in table and "flash_kernel#0/grid" in table
+    assert "heat" in heat and "skew=" in heat
+
+
+def test_noncausal_grid_steps_balanced_in_kv_block():
+    """Without the causal predicate every kv_block visit computes, so
+    the kv_block scope splits evenly across grid steps."""
+    fn = _flash_fn(64, 64, causal=False)
+    pf = probe(fn, KCFG.replace(offload=1.0, buffer_depth=4))
+    _, rec = pf(*_flash_args())
+    rep = pf.report(rec)
+    row = next(r for r in rep.rows if r.path.endswith("/kv_block"))
+    durs = [e - s for s, e in row.iters]
+    assert len(set(durs)) == 1
+
+
+def test_kernel_probes_off_is_seed_behavior():
+    fn = _flash_fn(64, 64)
+    pf = probe(fn, ProbeConfig(inline="off_all"))
+    _, rec = pf(*_flash_args())
+    assert not any("/kernel/" in p for p in pf.probe_paths())
+    _assert_oracle_exact(pf, rec, pf.oracle(*_flash_args()))
+
+
+def test_retarget_flips_kernel_probes_without_retracing():
+    fn = _flash_fn(64, 64)
+    args = _flash_args()
+    pf = probe(fn, ProbeConfig(inline="off_all"))
+    pf(*args)
+    closed = pf._closed
+    assert not any("/kernel/" in p for p in pf.probe_paths())
+    pf.retarget(KCFG)
+    _, rec = pf(*args)
+    assert pf._closed is closed            # trace reused, only re-extracted
+    assert any("/kernel/" in p for p in pf.probe_paths())
+    _assert_grid_invariants(pf, rec)
+
+
+def test_kernel_probes_reject_wallclock():
+    pf = probe(_flash_fn(64, 64),
+               ProbeConfig(kernel_probes=("*",), cycle_source="wallclock"))
+    with pytest.raises(ValueError, match="model"):
+        pf(*_flash_args())
+
+
+def test_kernel_probe_name_filter():
+    fn = _flash_fn(64, 64)
+    pf = probe(fn, ProbeConfig(inline="off_all",
+                               kernel_probes=("ssd_kernel",)))
+    pf(*_flash_args())
+    assert not any("/kernel/" in p for p in pf.probe_paths())
+
+
+def test_session_accumulates_grid_rows():
+    """ProbeSession sees intra-kernel rows with zero API change; calls
+    accumulate steps x grid size with no retrace."""
+    fn = _flash_fn(64, 64)
+    args = _flash_args()
+    with ProbeSession(fn, KCFG.replace(offload=1.0)) as s:
+        for _ in range(3):
+            s.step(*args)
+        snap = s.snapshot()
+    grid = [r for r in snap.rows if r.path.endswith("/grid")]
+    assert grid, snap.rows
+    steps = int(np.prod(
+        s.pf.hierarchy.node(grid[0].path).grid))
+    assert grid[0].calls == 3 * steps
+    assert grid[0].total_cycles > 0
+
+
+def test_mesh_record_sees_kernel_rows(tiny_mesh):
+    """MeshProbeSession/CycleRecord path: a kernel-probed shard body on
+    a 1-device mesh produces grid rows integer-equal to ShardOracle."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core import mesh_probe
+
+    mesh = tiny_mesh
+    args = _flash_args(S=64, D=16)
+    fn = _flash_fn(32, 32)
+    mpf = mesh_probe(fn, mesh, in_specs=(P(), P(), P()), out_specs=P(),
+                     config=KCFG)
+    out, state = mpf(*args)
+    assert np.array_equal(np.asarray(out), np.asarray(mpf.unprobed()(*args)))
+    rec = mpf.decode(state)
+    gi = [i for i, p in enumerate(rec.paths) if p.endswith("/grid")]
+    assert gi, rec.paths
+    oc = mpf.oracle(*args, device=0)
+    assert list(rec.device(0)["totals"]) == oc.totals
+    assert rec.device(0)["cycle"] == oc.cycle
+
+
+def test_kernel_oracle_grid_totals_helper():
+    fn = _flash_fn(64, 64)
+    args = _flash_args()
+    pf = probe(fn, KCFG)
+    _, rec = pf(*args)
+    orc = KernelOracle(pf.hierarchy, pf.assignment)
+    flat = jax.tree_util.tree_leaves(args)
+    oc = orc.run(pf.hierarchy.closed_jaxpr, flat)
+    gt = orc.grid_totals(oc, pf.probe_paths())
+    totals, _ = _decoded(rec)
+    for path, cyc in gt.items():
+        assert cyc == int(totals[list(pf.probe_paths()).index(path)])
+
+
+def test_dse_tile_calibration_shrinks_residual():
+    """The calibrated cost model prices tiles with measured grid-step
+    cycles: calibrating on the default config must shrink the per-tile
+    residual of a DIFFERENT config (bench_dse gates this end to end)."""
+    from repro.core import DSEEngine, EvalCache
+    from repro.core import costmodel as cm
+    from repro.kernels.search_spaces import flash_attention_space
+    import tempfile
+
+    space = flash_attention_space(B=1, H=1, S=128, D=16,
+                                  blocks_q=(64, 128), blocks_k=(64,),
+                                  pipelines=(1,))
+    eng = DSEEngine(space, cache=EvalCache(tempfile.mkdtemp()),
+                    max_steps=1)
+    try:
+        # both configs tile the q axis, so both have causal skips the
+        # static max-branch model over-prices
+        src = eng.analyze({"block_q": 64, "block_k": 64, "pipeline": 1})
+        dst = eng.analyze({"block_q": 32, "block_k": 32, "pipeline": 1})
+        eng.measure_tiles(src)
+        eng.measure_tiles(dst)
+        assert src.tile_measured is not None
+        assert src.tile_residual > 0              # causal skips unseen
+        uncal = abs(dst.tile_residual)
+        scale = eng.calibrate([src])              # learn on src only
+        assert scale is not None and 0 < scale < 1
+        # exact self-convergence: the ratio is over the body term only
+        # (DMA subtracted), so re-analyzing the source config must land
+        # on its measured tiles up to integer rounding
+        src_cal = eng.analyze(src.config)
+        self_resid = abs(src_cal.resources.static_cycles /
+                         src_cal.resources.grid_steps - src.tile_measured)
+        assert self_resid <= 1.0, self_resid
+        dst_cal = eng.analyze(dst.config)
+        cal = abs(dst_cal.resources.static_cycles /
+                  dst_cal.resources.grid_steps - dst.tile_measured)
+        assert cal < uncal                        # transfers to dst
+    finally:
+        cm.clear_kernel_calibration()
+
+
+def test_measure_tiles_survives_deep_scope_nesting():
+    """Grid probes must not be crowded out of the probe budget by
+    shallow wrapper scopes (measure_tiles retargets onto the kernel
+    subtrees), and a kernel-free space must fail loudly."""
+    from repro.core import DSEEngine, EvalCache
+    from repro.core.dse import SearchSpace
+    import tempfile
+
+    args = _flash_args(B=1, H=1, S=64, D=16)
+
+    def bind(cfg):
+        def fn(q, k, v):
+            out = (q, k, v)
+            import contextlib
+            with contextlib.ExitStack() as stack:
+                for i in range(20):           # > max_probes shallow scopes
+                    stack.enter_context(jax.named_scope(f"wrap{i}"))
+                return fa.flash_attention(*out, causal=True, block_q=32,
+                                          block_k=32, interpret=True)
+        return fn
+
+    space = SearchSpace(kernel_id="flash_attention", axes={"pipeline": (1,)},
+                        bind=bind, args=args, default={"pipeline": 1})
+    eng = DSEEngine(space, cache=EvalCache(tempfile.mkdtemp()))
+    t = eng.analyze({"pipeline": 1})
+    eng.measure_tiles(t)
+    assert t.tile_measured is not None and t.tile_measured > 0
+
+    plain = SearchSpace(kernel_id="none", axes={"a": (1,)},
+                        bind=lambda cfg: (lambda q, k, v: q + k + v),
+                        args=args, default={"a": 1})
+    eng2 = DSEEngine(plain, cache=EvalCache(tempfile.mkdtemp()))
+    t2 = eng2.analyze({"a": 1})
+    with pytest.raises(ValueError, match="no statically-gridded"):
+        eng2.measure_tiles(t2)
+
+
+# ------------------------------------------- exhaustive sweeps (slow)
+
+@pytest.mark.slow
+@pytest.mark.parametrize("bq,bk,pp", [
+    (64, 64, 2), (64, 32, 2), (128, 64, 1), (32, 64, 2), (128, 32, 4),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_grid_sweep_exact(bq, bk, pp, causal):
+    fn = _flash_fn(bq, bk, pp, causal)
+    args = _flash_args(S=128)
+    pf = probe(fn, KCFG)
+    out, rec = pf(*args)
+    assert jnp.array_equal(out, jax.jit(fn)(*args))
+    _assert_oracle_exact(pf, rec, pf.oracle(*args))
+    _assert_grid_invariants(pf, rec)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("chunk,pp", [(64, 2), (64, 4), (128, 4), (32, 1)])
+def test_ssd_grid_sweep_exact(chunk, pp):
+    fn = _ssd_fn(chunk, pp)
+    args = _ssd_args()
+    pf = probe(fn, KCFG)
+    out, rec = pf(*args)
+    assert jnp.array_equal(out, jax.jit(fn)(*args))
+    _assert_oracle_exact(pf, rec, pf.oracle(*args))
+    _assert_grid_invariants(pf, rec)

@@ -122,10 +122,10 @@ def _workload():
     return step
 
 
-def test_mesh_probe_single_device_mesh():
+def test_mesh_probe_single_device_mesh(tiny_mesh):
     """The full pipeline on a 1-device mesh: exact oracle equality,
     bit-identical outputs, collective attribution, report rendering."""
-    mesh = make_mesh((1,), ("dev",))
+    mesh = tiny_mesh
     step = _workload()
     x = jnp.arange(16.0).reshape(4, 4) * 0.1
     w = jnp.full((4, 4), 0.25)
@@ -159,10 +159,9 @@ def test_mesh_probe_single_device_mesh():
     assert np.array_equal(rec3.totals, 3 * rec.totals)
 
 
-def test_mesh_probe_rejects_wallclock():
-    mesh = make_mesh((1,), ("dev",))
+def test_mesh_probe_rejects_wallclock(tiny_mesh):
     with pytest.raises(ValueError):
-        mesh_probe(lambda x: x, mesh, None, None,
+        mesh_probe(lambda x: x, tiny_mesh, None, None,
                    ProbeConfig(cycle_source="wallclock"))
 
 

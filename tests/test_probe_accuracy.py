@@ -124,12 +124,8 @@ def test_probe_first4_truncation_without_offload():
 
 
 @pytest.mark.slow
-def test_probe_train_step_exact(key):
-    from repro.configs.registry import smoke_config
-    from repro.models import Model
-    cfg = smoke_config("tinyllama-1.1b")
-    m = Model(cfg)
-    params = m.init(key)
+def test_probe_train_step_exact(tiny_model):
+    cfg, m, params = tiny_model
     batch = {"tokens": jnp.zeros((2, 32), jnp.int32),
              "labels": jnp.ones((2, 32), jnp.int32)}
 

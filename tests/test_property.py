@@ -7,7 +7,7 @@ import pytest
 pytest.importorskip(
     "hypothesis",
     reason="dev-only dependency — pip install -r requirements-dev.txt")
-from hypothesis import given, settings, strategies as st
+from hypothesis import assume, given, settings, strategies as st
 
 from repro.core.counters import (c64, c64_add, c64_add_int, c64_sub,
                                  c64_to_int)
@@ -103,3 +103,75 @@ def test_probe_report_invariants(n_layers, width_pow, seed):
             assert by_path[parent].total_cycles >= r.total_cycles
     lay = by_path.get("layers/scan#0/layer")
     assert lay is not None and lay.calls == n_layers
+
+
+# ----------------------------- intra-kernel grid-step probing invariants
+
+def _kernel_probe_run(fn, args):
+    """Probe with grid-step counters + full offload; returns
+    (probed fn, report rows by path, grid node)."""
+    from repro.core import probe, ProbeConfig
+    pf = probe(fn, ProbeConfig(inline="off_all", kernel_probes=("*",),
+                               offload=1.0, buffer_depth=4))
+    out, rec = pf(*args)
+    rep = pf.report(rec)
+    return pf, out, {r.path: r for r in rep.rows}
+
+
+def _assert_grid_sum_invariant(pf, rows):
+    """sum of recorded per-grid-step cycles == grid total == parent
+    kernel scope total — for every probed kernel."""
+    kernels = [p for p in rows if pf.hierarchy.node(p) is not None
+               and pf.hierarchy.node(p).kind == "kernel"]
+    assert kernels
+    for kpath in kernels:
+        grow = rows[kpath + "/grid"]
+        durs = [e - s for s, e in grow.iters]
+        assert len(durs) == grow.calls
+        assert sum(durs) == grow.total_cycles
+        assert grow.total_cycles == rows[kpath].total_cycles
+
+
+@settings(max_examples=6, deadline=None)
+@given(bq=st.sampled_from([16, 32, 64]), bk=st.sampled_from([16, 32, 64]),
+       pp=st.sampled_from([1, 2]), causal=st.booleans())
+def test_flash_grid_step_cycles_sum_to_kernel_scope(bq, bk, pp, causal):
+    S = 64
+    assume(S % bq == 0 and S % bk == 0 and (S // bk) % pp == 0)
+    from repro.kernels import flash_attention as fa
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(bq + bk + pp), 3)
+    q = jax.random.normal(k1, (1, 1, S, 16))
+    kk = jax.random.normal(k2, (1, 1, S, 16))
+    v = jax.random.normal(k3, (1, 1, S, 16))
+
+    def fn(q, k, v):
+        return fa.flash_attention(q, k, v, causal=causal, block_q=bq,
+                                  block_k=bk, pipeline=pp, interpret=True)
+
+    pf, out, rows = _kernel_probe_run(fn, (q, kk, v))
+    _assert_grid_sum_invariant(pf, rows)
+    # probed output bit-identical to the unprobed kernel
+    assert np.array_equal(np.asarray(out),
+                          np.asarray(jax.jit(fn)(q, kk, v)))
+
+
+@settings(max_examples=6, deadline=None)
+@given(chunk=st.sampled_from([16, 32, 64]), pp=st.sampled_from([1, 2, 4]),
+       L=st.sampled_from([64, 128]))
+def test_ssd_grid_step_cycles_sum_to_kernel_scope(chunk, pp, L):
+    assume(L % chunk == 0 and chunk % pp == 0)
+    from repro.kernels import ssd_scan as ssdk
+    ks = jax.random.split(jax.random.PRNGKey(chunk + pp + L), 4)
+    x = jax.random.normal(ks[0], (1, 2, L, 8)) * 0.5
+    a = -jnp.abs(jax.random.normal(ks[1], (1, 2, L))) * 0.3
+    b = jax.random.normal(ks[2], (1, 1, L, 16)) * 0.5
+    c = jax.random.normal(ks[3], (1, 1, L, 16)) * 0.5
+
+    def fn(x, a, b, c):
+        return ssdk.ssd_scan(x, a, b, c, chunk=chunk, pipeline=pp,
+                             interpret=True)
+
+    pf, out, rows = _kernel_probe_run(fn, (x, a, b, c))
+    _assert_grid_sum_invariant(pf, rows)
+    assert np.array_equal(np.asarray(out),
+                          np.asarray(jax.jit(fn)(x, a, b, c)))

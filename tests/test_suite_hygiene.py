@@ -1,0 +1,81 @@
+"""Test-suite speed audit: the fast CI subset must stay fast.
+
+CI's tier-1 job runs ``-m "not slow"`` under a hard step timeout; the
+heavyweight end-to-end modules and the kernel-probe exhaustive sweeps
+must therefore carry ``@pytest.mark.slow``. These checks are static
+(marks and workflow text), so a heavy test silently joining the fast
+subset fails here instead of timing out CI twenty minutes later."""
+import os
+import re
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# modules whose every test is heavyweight (subprocess meshes, full
+# train/serve loops): module-level pytestmark required
+SLOW_MODULES = ("test_distributed.py",)
+
+# individually slow tests: exhaustive kernel-probe sweeps, full train
+# loops and train-step probing must never run in the fast subset
+SLOW_TESTS = {
+    "test_kernelprobe.py": ("test_flash_grid_sweep_exact",
+                            "test_ssd_grid_sweep_exact"),
+    "test_probe_accuracy.py": ("test_probe_train_step_exact",),
+    "test_system.py": ("test_training_loss_decreases",
+                       "test_training_resume_continues",
+                       "test_probed_production_train_step",
+                       "test_dryrun_cell_machinery_smoke"),
+}
+
+
+def _read(name):
+    with open(os.path.join(REPO, "tests", name)) as f:
+        return f.read()
+
+
+def _decorator_block(src: str, name: str) -> str:
+    """Source between the previous top-level def/class and ``name``'s
+    def — i.e. the target's decorators (however many lines they span)."""
+    m = re.search(r"^def " + re.escape(name) + r"\b", src, re.M)
+    assert m, f"{name} missing (renamed without updating the speed audit?)"
+    prev = [p.end() for p in
+            re.finditer(r"^(?:def|class) \w+.*$", src, re.M)
+            if p.end() < m.start()]
+    return src[(prev[-1] if prev else 0):m.start()]
+
+
+def test_heavy_modules_are_slow_marked():
+    """Every test in the heavyweight modules is excluded from the fast
+    subset — via a module-level pytestmark or per-test marks."""
+    for mod in SLOW_MODULES:
+        src = _read(mod)
+        if re.search(r"^pytestmark\s*=\s*pytest\.mark\.slow", src, re.M):
+            continue
+        n_tests = len(re.findall(r"^def test_", src, re.M))
+        n_slow = len(re.findall(r"@pytest\.mark\.slow", src))
+        assert n_slow >= n_tests, \
+            f"{mod}: {n_tests} tests but only {n_slow} slow marks"
+
+
+def test_exhaustive_sweeps_are_slow_marked():
+    for mod, names in SLOW_TESTS.items():
+        src = _read(mod)
+        for name in names:
+            assert "pytest.mark.slow" in _decorator_block(src, name), \
+                f"{mod}: {name} must be @pytest.mark.slow"
+
+
+def test_fast_job_keeps_hard_timeout_and_slow_filter():
+    """The CI fast job must exclude slow tests AND keep a hard timeout
+    at or below the current budget (raising it is a reviewed decision,
+    not a drive-by)."""
+    with open(os.path.join(REPO, ".github", "workflows", "ci.yml")) as f:
+        ci = f.read()
+    assert 'not slow' in ci
+    step_timeouts = [int(x) for x in
+                     re.findall(r"timeout-minutes:\s*(\d+)", ci)]
+    assert step_timeouts and max(step_timeouts) <= 30
+
+
+def test_slow_marker_registered():
+    with open(os.path.join(REPO, "pytest.ini")) as f:
+        assert "slow:" in f.read()
