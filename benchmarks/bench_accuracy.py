@@ -6,7 +6,7 @@ import numpy as np
 
 from benchmarks.common import emit, layered_workload, model_workloads, timeit
 from repro.core import ProbeConfig, probe
-from repro.core.counters import c64_to_int
+from repro.core.instrument import decode_record
 
 
 def run():
@@ -29,10 +29,11 @@ def run():
         out, rec = pf(*args)
         oc = pf.oracle(*args)
         ok = True
+        dec = decode_record(rec)
         for i, p in enumerate(pf.probe_paths()):
-            ok &= int(c64_to_int(np.asarray(rec["totals"][i]))) == oc.totals[i]
-            ok &= int(np.asarray(rec["calls"][i])) == oc.calls[i]
-        span = int(c64_to_int(np.asarray(rec["cycle"])))
+            ok &= int(dec["totals"][i]) == oc.totals[i]
+            ok &= int(dec["calls"][i]) == oc.calls[i]
+        span = dec["cycle"]
         ok &= span == oc.cycle
         exact += bool(ok)
         total += 1

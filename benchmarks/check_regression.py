@@ -34,9 +34,10 @@ from typing import Dict, Iterator, List, Optional, Tuple
 LOWER_BETTER = (
     "cycles", "span", "state_B", "state_bytes", "dram_B", "extra_eqns",
     "probe_ops", "probe_bytes", "measurements", "probed_steps",
-    "mean_cycles", "skew", "wire_B",
+    "mean_cycles", "skew", "wire_B", "err", "sub_walks",
 )
-HIGHER_BETTER = ("speedup_x1000", "saving", "exact", "cache_hits")
+HIGHER_BETTER = ("speedup_x1000", "saving", "exact", "cache_hits",
+                 "reduction_x1000")
 
 _NUM = re.compile(r"^(-?\d+(?:\.\d+)?)(?:[%x]?)$")
 

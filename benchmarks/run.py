@@ -44,12 +44,13 @@ def main() -> None:
 
     from benchmarks import (bench_accuracy, bench_discrepancy,
                             bench_distributed, bench_dse, bench_incremental,
-                            bench_latency_impact, bench_offload,
-                            bench_overhead, bench_roofline, bench_streaming,
-                            common)
+                            bench_instrument, bench_latency_impact,
+                            bench_offload, bench_overhead, bench_roofline,
+                            bench_streaming, common)
     benches = [
         ("Table II  (cycle accuracy, 28 designs)", bench_accuracy),
         ("Fig 8/9/10 (overhead + analytical model)", bench_overhead),
+        ("Instrument (packed SoA probe datapath)", bench_instrument),
         ("Fig 7/11  (incremental synthesis)", bench_incremental),
         ("Table III (latency/Fmax impact)", bench_latency_impact),
         ("Fig 12    (DRAM dump ratio)", bench_offload),

@@ -55,9 +55,8 @@ def main():
     # 4. cross-verify against the independent oracle (the "ILA")
     oracle = pf.oracle(x, w)
     i = pf.probe_paths().index("layers/scan#0/layer")
-    from repro.core.counters import c64_to_int
-    import numpy as np
-    device_cycles = int(c64_to_int(np.asarray(record["totals"][i])))
+    from repro.core.instrument import decode_record
+    device_cycles = int(decode_record(record)["totals"][i])
     print(f"\nlayers/scan#0/layer: device={device_cycles} "
           f"oracle={oracle.totals[i]} -> "
           f"{'100% MATCH' if device_cycles == oracle.totals[i] else 'BUG'}")

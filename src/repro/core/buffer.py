@@ -19,18 +19,23 @@ import numpy as np
 from repro.core.counters import c64_to_int
 
 
+def row_bounds(row: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Decode a ring row ((depth, 2, 2) uint32) into (starts, ends)
+    int64 arrays — the whole-array form the vectorized consumers use."""
+    return (np.atleast_1d(c64_to_int(np.asarray(row)[:, 0])),
+            np.atleast_1d(c64_to_int(np.asarray(row)[:, 1])))
+
+
 def row_spans(row: np.ndarray) -> List[Tuple[int, int]]:
     """Decode a ring row ((depth, 2, 2) uint32) into (start, end) pairs."""
-    starts = c64_to_int(row[:, 0])
-    ends = c64_to_int(row[:, 1])
-    return [(int(s), int(e))
-            for s, e in zip(np.atleast_1d(starts), np.atleast_1d(ends))]
+    starts, ends = row_bounds(row)
+    return list(zip(starts.tolist(), ends.tolist()))
 
 
 def row_durations(row: np.ndarray) -> np.ndarray:
     """Decode a ring row into per-call cycle durations (int64)."""
-    spans = row_spans(row)
-    return np.array([e - s for s, e in spans], dtype=np.int64)
+    starts, ends = row_bounds(row)
+    return ends - starts
 
 
 class HostSink:
@@ -78,8 +83,13 @@ class HostSink:
         return out
 
 
-def state_bytes(n_probes: int, depth: int) -> int:
-    """On-device profiler state footprint (the resource-model 'FF' term)."""
-    per_probe = 4 * 8 + 4            # starts/ends/totals/last (u32 pairs) + calls
+def state_bytes(n_probes: int, depth: int, layout: str = "packed") -> int:
+    """On-device profiler state footprint (the resource-model 'FF' term).
+
+    The packed SoA layout carries three c64 planes (starts/totals/ends)
+    — the legacy dict layout adds a fourth (``last``) that the packed
+    enter-subtract/exit-add trick eliminates."""
+    planes = 4 if layout == "legacy" else 3
+    per_probe = planes * 8 + 4       # c64 counter planes + calls (u32)
     ring = depth * 2 * 2 * 4         # (depth, start/end, hi/lo) u32
     return 8 + n_probes * (per_probe + ring)

@@ -46,9 +46,9 @@ import numpy as np
 from repro.core.buffer import state_bytes
 from repro.core.costmodel import (CLOCK_HZ, DeviceBudget, KernelResources,
                                   jaxpr_kernel_resources)
-from repro.core.counters import c64_to_int
 from repro.core.incremental import (EvalCache, device_kind,
                                     fingerprint_closed)
+from repro.core.instrument import decode_record
 from repro.core.pragma import ProbeConfig, probe
 
 STORAGE_DEPTH = {"registers": 4, "hybrid": 16, "bram": 64}
@@ -135,7 +135,7 @@ def run_dse(fn: Callable, args: Sequence[Any],
             pf.sink.reset()
             out, rec = pf(*args)          # compile + run
             t_inst = _timeit(pf, *args, repeats=repeats)
-            span = int(c64_to_int(np.asarray(rec["cycle"])))
+            span = decode_record(jax.device_get(rec))["cycle"]
             span_s = max(span / CLOCK_HZ, 1e-12)
             ov = measure_overhead(fn, args, cfg)
             if base_eqns is None:
@@ -406,7 +406,6 @@ class DSEEngine:
         cost model's flat per-step estimate, ``tile_residual`` their
         gap. The kernel body names observed are remembered as
         ``calibrate()`` targets."""
-        from repro.core.instrument import decode_record
         from repro.core.pragma import probe as _probe
 
         from repro.core import costmodel as _cm

@@ -155,11 +155,51 @@ _DESCEND = {"pjit", "jit", "closed_call", "core_call", "custom_jvp_call",
 _LOOPS = {"scan": "loop", "while": "while"}
 
 
+# Extraction memo: ``extract`` is pure in (closed jaxpr identity,
+# kernel_probes), and the returned Hierarchy strongly references its
+# closed jaxpr — so while an entry lives in this bounded LRU, the id
+# cannot be recycled and the identity check below is sound. Retargets,
+# DSE re-measure loops and overhead sweeps that re-extract the same
+# trace hit this instead of re-walking (paper §IV-C.2's incremental
+# reuse, measured in bench_instrument).
+_EXTRACT_MEMO: "OrderedDict[Tuple[int, Tuple[str, ...]], Hierarchy]" = None
+_EXTRACT_MEMO_MAX = 32
+extract_hits = 0
+extract_misses = 0
+
+
 def extract(closed_jaxpr, kernel_probes: Tuple[str, ...] = ()) -> Hierarchy:
-    """Extract the scope hierarchy. With ``kernel_probes`` (kernel body
-    names, '*' = all), matched ``pallas_call`` equations are descended
-    into ``<scope>/kernel/<name>#i/grid`` subtrees (see
-    ``core.kernelprobe``) instead of being flat-costed leaves."""
+    """Extract the scope hierarchy (memoized on the closed jaxpr's
+    identity). With ``kernel_probes`` (kernel body names, '*' = all),
+    matched ``pallas_call`` equations are descended into
+    ``<scope>/kernel/<name>#i/grid`` subtrees (see ``core.kernelprobe``)
+    instead of being flat-costed leaves."""
+    global _EXTRACT_MEMO, extract_hits, extract_misses
+    if _EXTRACT_MEMO is None:
+        from collections import OrderedDict
+        _EXTRACT_MEMO = OrderedDict()
+    # eqn costs depend on the ambient cost-model context: kernel
+    # calibration scales and the mesh axis sizes for collectives — a
+    # hierarchy extracted under one context must not serve another
+    sizes = cm.current_axis_sizes()
+    ctx = (cm.kernel_calibration_state(),
+           tuple(sorted(sizes.items())) if sizes else None)
+    key = (id(closed_jaxpr), tuple(kernel_probes), ctx)
+    hit = _EXTRACT_MEMO.get(key)
+    if hit is not None and hit.closed_jaxpr is closed_jaxpr:
+        _EXTRACT_MEMO.move_to_end(key)
+        extract_hits += 1
+        return hit
+    extract_misses += 1
+    h = _extract_uncached(closed_jaxpr, tuple(kernel_probes))
+    _EXTRACT_MEMO[key] = h
+    while len(_EXTRACT_MEMO) > _EXTRACT_MEMO_MAX:
+        _EXTRACT_MEMO.popitem(last=False)
+    return h
+
+
+def _extract_uncached(closed_jaxpr,
+                      kernel_probes: Tuple[str, ...]) -> Hierarchy:
     from repro.core import kernelprobe
 
     root = ScopeNode(name="", path="", kind="root")

@@ -113,8 +113,12 @@ class EvalCache:
     @staticmethod
     def entry_key(kernel_id: str, config: Dict[str, Any],
                   fingerprint: str, device: str) -> str:
-        blob = json.dumps([kernel_id, config, fingerprint, device],
-                          sort_keys=True)
+        # the probe-state layout version is part of the key: measurements
+        # recorded under the legacy dict layout can never serve a run
+        # instrumented with the packed layout (and vice versa)
+        from repro.core.instrument import STATE_LAYOUT_VERSION
+        blob = json.dumps([kernel_id, config, fingerprint, device,
+                           STATE_LAYOUT_VERSION], sort_keys=True)
         return hashlib.sha256(blob.encode()).hexdigest()[:24]
 
     # -- API -----------------------------------------------------------

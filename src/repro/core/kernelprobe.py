@@ -211,7 +211,13 @@ class DeviceOps(_WalkOps):
                 self.box[0] = self.instr.src.advance(self.box[0], v)
             return
         st = dict(self.box[0])
-        st["cycle"] = c64_add_u32(st["cycle"], v)
+        if "cyc_lo" in st:                  # packed: scalar add-with-carry
+            v32 = jnp.asarray(v, U32)
+            nlo = st["cyc_lo"] + v32
+            st["cyc_hi"] = st["cyc_hi"] + (nlo < v32).astype(U32)
+            st["cyc_lo"] = nlo
+        else:
+            st["cycle"] = c64_add_u32(st["cycle"], v)
         self.box[0] = st
 
     def transition(self, a, b):

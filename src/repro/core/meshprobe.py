@@ -356,10 +356,11 @@ class MeshProbedFunction:
             paths=paths, depth=self.config.buffer_depth,
             spill=(False,) * len(paths))
         interp = Instrumenter(h, self._assignment, cycle_source="model",
-                              sink=None)
+                              sink=None, layout=self.config.layout)
         state_specs = jax.tree_util.tree_map(
             lambda _: P(self.mesh_axes),
-            init_state(self._assignment.n, self.config.buffer_depth))
+            init_state(self._assignment.n, self.config.buffer_depth,
+                       layout=self.config.layout))
         axis_sizes = self.axis_sizes
         closed, out_tree = self._closed, self._out_tree
 
@@ -392,7 +393,8 @@ class MeshProbedFunction:
         # same specialization every later step reuses — zero retraces
         from jax.sharding import NamedSharding
         sh = NamedSharding(self.mesh, P(self.mesh_axes))
-        base = init_state(self._assignment.n, self.config.buffer_depth)
+        base = init_state(self._assignment.n, self.config.buffer_depth,
+                          layout=self.config.layout)
         return {k: jax.device_put(
                     jnp.zeros((self.n_devices,) + v.shape, v.dtype), sh)
                 for k, v in base.items()}
@@ -618,7 +620,12 @@ class MeshProbeSession:
 
     def _read_totals(self) -> np.ndarray:
         from repro.core.counters import c64_to_int
-        t = c64_to_int(np.asarray(jax.device_get(self._state["totals"])))
+        from repro.core.instrument import TOTALS
+        st = jax.device_get(self._state)
+        if "cnt" in st:                            # packed: (D, 3, n, 2)
+            t = c64_to_int(np.asarray(st["cnt"])[:, TOTALS])
+        else:
+            t = c64_to_int(np.asarray(st["totals"]))
         return np.atleast_2d(t).reshape(-1)       # device-major (D*n,)
 
     def _roll_window(self):
@@ -647,7 +654,8 @@ class MeshProbeSession:
         from repro.core.buffer import state_bytes
         dev = (self.mpf.n_devices *
                state_bytes(self.mpf.assignment.n,
-                           self.mpf.config.buffer_depth)
+                           self.mpf.config.buffer_depth,
+                           layout=self.mpf.config.layout)
                if self._state is not None else 0)
         return host + dev
 

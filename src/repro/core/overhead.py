@@ -7,8 +7,8 @@ The paper budgets LUT/FF as
 TPU programs spend "resource" as extra HLO equations and on-device state
 bytes instead; the model keeps the same functional form:
 
-    extra_eqns(N, D, E)  ~=  c0 + c1*E + c2*log2(N+1)
-    state_bytes(N, D)    =   8 + N*(36 + 16*D)          (exact, by layout)
+    extra_eqns(N, D, E, ...)  ~  fitted linear model (see OverheadModel)
+    state_bytes(N, D)    =   8 + N*(28 + 16*D)   (packed; legacy 36 + 16D)
 
 where N = probes, D = ring depth, E = static event sites. The constants
 are fitted once against measured instrumented-jaxpr deltas
@@ -19,7 +19,6 @@ paper's "adjusts the number of profiling modules and queue depths".
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Any, Dict, List, Sequence, Tuple
 
@@ -30,45 +29,63 @@ from repro.core.buffer import state_bytes
 from repro.core.pragma import ProbeConfig, ProbedFunction, probe
 
 
-def count_event_sites(pf: ProbedFunction) -> int:
-    """Static enter/exit emission sites in the instrumented program."""
+def count_sites(pf: ProbedFunction) -> Dict[str, int]:
+    """Static structure of the instrumented program: ``event_sites``
+    (enter/exit emissions), ``transitions`` (batched scope-delta update
+    sites — what the packed layout pays per), and ``cf_sites``
+    (threaded control-flow constructs: while/cond always, scans whose
+    bodies carry probe state) — the branch/loop feature that makes the
+    overhead model price control-flow-heavy configs correctly."""
     h = pf.hierarchy
     asg = pf.assignment
     from repro.core.instrument import Instrumenter
     interp = Instrumenter(h, asg)
     sites = 0
+    transitions = 0
+    cf_sites = 0
+
+    def delta(old, new):
+        nonlocal sites, transitions
+        a, b = interp._chain(old), interp._chain(new)
+        i = 0
+        while i < len(a) and i < len(b) and a[i] == b[i]:
+            i += 1
+        if len(a[i:]) + len(b[i:]):
+            sites += len(a[i:]) + len(b[i:])
+            transitions += 1
 
     def walk(jaxpr, entry_path):
-        nonlocal sites
+        nonlocal sites, transitions, cf_sites
         cur = entry_path
         for eqn in jaxpr.eqns:
             info = h.eqn_info.get(id(eqn))
             path = info.path if info else cur
             if path != cur:
-                a, b = interp._chain(cur), interp._chain(path)
-                i = 0
-                while i < len(a) and i < len(b) and a[i] == b[i]:
-                    i += 1
-                sites += len(a[i:]) + len(b[i:])
+                delta(cur, path)
                 cur = path
             name = eqn.primitive.name
             if name == "scan":
                 body = eqn.params["jaxpr"].jaxpr
-                if interp._needs_threading(body) or (
-                        info and info.sub_path and
-                        asg.id_of(info.sub_path) is not None):
-                    if info and info.sub_path and \
-                            asg.id_of(info.sub_path) is not None:
+                looped = (info and info.sub_path and
+                          asg.id_of(info.sub_path) is not None)
+                if interp._needs_threading(body) or looped:
+                    cf_sites += 1
+                    if looped:
                         sites += 2
-                    walk(body, info.sub_path or "")
+                        transitions += 2
+                    walk(body, info.sub_path if info and info.sub_path
+                         else "")
             elif name == "while":
+                cf_sites += 1
                 if info and info.sub_path and \
                         asg.id_of(info.sub_path) is not None:
                     sites += 2
+                    transitions += 2
                 walk(eqn.params["body_jaxpr"].jaxpr,
                      (info.sub_path + "/body") if info and info.sub_path
                      else "")
             elif name == "cond":
+                cf_sites += 1
                 for bi, br in enumerate(eqn.params["branches"]):
                     walk(br.jaxpr,
                          f"{info.sub_path}/branch{bi}"
@@ -78,14 +95,16 @@ def count_event_sites(pf: ProbedFunction) -> int:
                 for sub in cm._sub_jaxprs(eqn):
                     walk(cm._as_jaxpr(sub), cur)
                     break
-        a, b = interp._chain(cur), interp._chain(entry_path)
-        i = 0
-        while i < len(a) and i < len(b) and a[i] == b[i]:
-            i += 1
-        sites += len(a[i:]) + len(b[i:])
+        delta(cur, entry_path)
 
     walk(h.closed_jaxpr.jaxpr, "")
-    return sites
+    return dict(event_sites=sites, transitions=transitions,
+                cf_sites=cf_sites)
+
+
+def count_event_sites(pf: ProbedFunction) -> int:
+    """Static enter/exit emission sites in the instrumented program."""
+    return count_sites(pf)["event_sites"]
 
 
 def measure_overhead(fn, args, cfg: ProbeConfig) -> Dict[str, Any]:
@@ -98,14 +117,17 @@ def measure_overhead(fn, args, cfg: ProbeConfig) -> Dict[str, Any]:
     inst = jax.make_jaxpr(lambda *a: pf._jitted.__wrapped__(*a))(*args)
     inst_eqns = _total_eqns(inst.jaxpr)
     n = pf.assignment.n
+    sites = count_sites(pf)
     return dict(
         base_eqns=base_eqns,
         inst_eqns=inst_eqns,
         extra_eqns=inst_eqns - base_eqns,
         n_probes=n,
         depth=cfg.buffer_depth,
-        event_sites=count_event_sites(pf),
-        state_bytes=state_bytes(n, cfg.buffer_depth),
+        event_sites=sites["event_sites"],
+        transitions=sites["transitions"],
+        cf_sites=sites["cf_sites"],
+        state_bytes=state_bytes(n, cfg.buffer_depth, layout=cfg.layout),
     )
 
 
@@ -120,13 +142,21 @@ def _total_eqns(jaxpr) -> int:
 
 @dataclass
 class OverheadModel:
-    """extra_eqns ~ c0 + c1*event_sites + c2*log2(N+1)."""
-    coefs: Tuple[float, float, float] = (0.0, 0.0, 0.0)
+    """extra_eqns ~ c0 + c1*event_sites + c2*transitions + c3*cf_sites.
+
+    ``cf_sites`` (threaded while/cond/scan constructs) is what makes
+    control-flow-heavy configs price correctly: a threaded loop pays
+    carry plumbing and per-iteration emission the flat event count
+    cannot see (the seed model mispriced the while-loop config by 28%).
+    """
+    coefs: Tuple[float, ...] = (0.0, 0.0, 0.0, 0.0)
 
     @staticmethod
     def features(sample: Dict[str, Any]) -> List[float]:
         return [1.0, float(sample["event_sites"]),
-                math.log2(sample["n_probes"] + 1.0)]
+                float(sample.get("transitions",
+                                 sample["event_sites"])),
+                float(sample.get("cf_sites", 0))]
 
     @classmethod
     def fit(cls, samples: Sequence[Dict[str, Any]]) -> "OverheadModel":
@@ -139,8 +169,9 @@ class OverheadModel:
         return float(np.dot(self.coefs, self.features(sample)))
 
     @staticmethod
-    def predict_state_bytes(n_probes: int, depth: int) -> int:
-        return state_bytes(n_probes, depth)
+    def predict_state_bytes(n_probes: int, depth: int,
+                            layout: str = "packed") -> int:
+        return state_bytes(n_probes, depth, layout=layout)
 
 
 def adapt_allocation(n_candidates: int, depth: int, budget_bytes: int

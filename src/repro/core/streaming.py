@@ -52,10 +52,18 @@ HIST_BUCKETS = 64
 _I64_MAX = np.iinfo(np.int64).max
 
 
+# powers of two for exact vectorized bit_length (searchsorted over
+# uint64 is integer-exact, unlike float log2 near power-of-two edges)
+_POW2 = (np.uint64(1) << np.arange(HIST_BUCKETS - 1, dtype=np.uint64))
+
+
 def _buckets_of(durations: np.ndarray) -> np.ndarray:
-    """Log₂ bucket index per duration: bucket b holds [2^(b-1), 2^b)."""
-    return np.array([min(int(x).bit_length(), HIST_BUCKETS - 1)
-                     for x in durations], dtype=np.int64)
+    """Log₂ bucket index per duration: bucket b holds [2^(b-1), 2^b).
+
+    Vectorized bit_length: the number of powers of two <= |x| equals
+    ``int(x).bit_length()`` exactly, clamped to the last bucket."""
+    d = np.abs(np.asarray(durations, dtype=np.int64)).astype(np.uint64)
+    return np.searchsorted(_POW2, d, side="right").astype(np.int64)
 
 
 def _bucket_rep(b: int) -> int:
@@ -86,7 +94,12 @@ class StreamAggregator:
         self._lock = threading.Lock()
 
     def add(self, pid: int, durations: np.ndarray):
-        """Fold per-call cycle durations (oldest first) into the stats."""
+        """Fold per-call cycle durations (oldest first) into the stats.
+
+        Whole-array numpy throughout (the hot decode path): the EMA uses
+        the closed form of the recurrence ``e <- (1-a)e + ax`` — the
+        same statistic as the sequential loop up to float rounding.
+        """
         d = np.asarray(durations, dtype=np.int64).ravel()
         if d.size == 0:
             return
@@ -96,9 +109,17 @@ class StreamAggregator:
             self.total[pid] += int(d.sum())
             self.min[pid] = min(int(self.min[pid]), int(d.min()))
             self.max[pid] = max(int(self.max[pid]), int(d.max()))
-            a, e = self.alpha, float(self.ema[pid])
-            for i, x in enumerate(d):
-                e = float(x) if (first and i == 0) else (1 - a) * e + a * x
+            a = self.alpha
+            k = d.size
+            # weights w[i] = (1-a)^(k-1-i): one dot product replaces the
+            # per-sample Python recurrence
+            w = np.power(1.0 - a, np.arange(k - 1, -1, -1, dtype=np.float64))
+            x = d.astype(np.float64)
+            if first:
+                e = float(x[0]) if k == 1 else \
+                    float(w[0] * x[0] + a * np.dot(w[1:], x[1:]))
+            else:
+                e = float((1.0 - a) ** k * self.ema[pid] + a * np.dot(w, x))
             self.ema[pid] = e
             np.add.at(self.hist[pid], _buckets_of(d), 1)
 
@@ -191,20 +212,44 @@ class StreamingSink(HostSink):
     def _drain(self):
         while True:
             item = self._q.get()
-            try:
-                if item is None:
-                    return
+            if item is None:
+                self._q.task_done()
+                return
+            # batch: grab everything already queued, decode each row to
+            # durations (vectorized), then fold ONE concatenated array
+            # per probe — queue FIFO keeps per-probe sample order
+            batch = [item]
+            done = 1
+            stop = False
+            while True:
                 try:
-                    pid, row = item
-                    if self.stats is None:
-                        raise RuntimeError("sink not bound")
-                    self.stats.add(pid, row_durations(row))
+                    nxt = self._q.get_nowait()
+                except queue.Empty:
+                    break
+                done += 1
+                if nxt is None:
+                    stop = True
+                    break
+                batch.append(nxt)
+            per_pid: Dict[int, List[np.ndarray]] = {}
+            for pid, row in batch:
+                try:
+                    per_pid.setdefault(pid, []).append(row_durations(row))
                 except Exception:
                     # a poisoned row must not kill the drain thread —
                     # that would turn every later flush() into a hang
                     self.dropped += 1
-            finally:
+            for pid, durs in per_pid.items():
+                try:
+                    if self.stats is None:
+                        raise RuntimeError("sink not bound")
+                    self.stats.add(pid, np.concatenate(durs))
+                except Exception:
+                    self.dropped += 1
+            for _ in range(done):
                 self._q.task_done()
+            if stop:
+                return
 
     def flush(self):
         """Block until every enqueued spill has been aggregated."""
@@ -369,8 +414,8 @@ class ProbeSession:
         self._t0 = time.perf_counter()
 
     def _read_totals(self) -> np.ndarray:
-        from repro.core.counters import c64_to_int
-        return np.atleast_1d(c64_to_int(np.asarray(self._state["totals"])))
+        from repro.core.instrument import state_totals
+        return state_totals(self._state)
 
     def _maybe_roll_window(self):
         """Close the current time window once it is full. The window
@@ -447,7 +492,9 @@ class ProbeSession:
         if self._prev_totals is not None:
             host += self._prev_totals.nbytes
         host += sum(w.totals.nbytes for w in self._windows)
-        dev = state_bytes(self.pf.assignment.n, self.pf.config.buffer_depth) \
+        dev = state_bytes(self.pf.assignment.n,
+                          self.pf.config.buffer_depth,
+                          layout=self.pf.config.layout) \
             if self._state is not None else 0
         return host + dev
 

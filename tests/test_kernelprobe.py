@@ -14,7 +14,7 @@ import pytest
 
 from repro.core import (KernelOracle, ProbeConfig, ProbeSession,
                         kernel_grid_heat, kernel_grid_table, probe)
-from repro.core.counters import c64_to_int
+from repro.core.instrument import decode_record
 from repro.kernels import flash_attention as fa
 from repro.kernels import ssd_scan as ssdk
 
@@ -55,18 +55,18 @@ KCFG = ProbeConfig(inline="off_all", kernel_probes=("*",))
 
 
 def _decoded(rec):
-    return (np.atleast_1d(c64_to_int(np.asarray(rec["totals"]))),
-            np.asarray(rec["calls"]).astype(np.int64))
+    dec = decode_record(rec)
+    return dec["totals"], dec["calls"]
 
 
 def _assert_oracle_exact(pf, rec, oc):
-    totals, calls = _decoded(rec)
+    dec = decode_record(rec)
     for i, p in enumerate(pf.probe_paths()):
-        assert int(totals[i]) == oc.totals[i], p
-        assert int(calls[i]) == oc.calls[i], p
-        assert int(c64_to_int(np.asarray(rec["starts"][i]))) == oc.starts[i], p
-        assert int(c64_to_int(np.asarray(rec["ends"][i]))) == oc.ends[i], p
-    assert int(c64_to_int(np.asarray(rec["cycle"]))) == oc.cycle
+        assert int(dec["totals"][i]) == oc.totals[i], p
+        assert int(dec["calls"][i]) == oc.calls[i], p
+        assert int(dec["starts"][i]) == oc.starts[i], p
+        assert int(dec["ends"][i]) == oc.ends[i], p
+    assert dec["cycle"] == oc.cycle
 
 
 def _assert_grid_invariants(pf, rec):

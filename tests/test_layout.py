@@ -1,0 +1,186 @@
+"""Packed-SoA probe-state layout equivalence (the PR-5 overhaul net).
+
+The packed layout (contiguous counter planes, batched transition
+scatters, scalar clock words, enter-subtract/exit-add totals) must be
+observationally identical to the retained legacy dict-of-small-arrays
+layout: same decoded records bit for bit, same oracle integer equality,
+same spill streams, and bit-identical model outputs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ProbeConfig, probe
+from repro.core.buffer import state_bytes
+from repro.core.instrument import (STATE_LAYOUT_VERSION, decode_record,
+                                   init_state, state_layout, state_totals)
+
+
+def _nested(x, w):
+    def inner(c, _):
+        with jax.named_scope("inner"):
+            return jnp.tanh(c @ w) + c, None
+
+    def outer(c, _):
+        with jax.named_scope("group"):
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            with jax.named_scope("mix"):
+                c = c @ w.T @ w
+        return c, None
+
+    with jax.named_scope("outer"):
+        x, _ = jax.lax.scan(outer, x, None, length=2)
+
+    def cond(s):
+        return jnp.sum(jnp.abs(s[0])) < 1e3
+
+    def grow(s):
+        with jax.named_scope("grow"):
+            return (s[0] * 1.4 + 0.1, s[1] + 1)
+
+    with jax.named_scope("dynamic"):
+        x, n = jax.lax.while_loop(cond, grow, (x, jnp.int32(0)))
+    with jax.named_scope("head"):
+        return jnp.sum(x * x), n
+
+
+_ARGS = (jnp.ones((4, 8)) * 0.05, jnp.full((8, 8), 0.07))
+
+
+def _decoded_pair(cfg):
+    recs = {}
+    outs = {}
+    pfs = {}
+    for layout in ("packed", "legacy"):
+        pf = probe(_nested, cfg.replace(layout=layout))
+        out, rec = pf(*_ARGS)
+        pfs[layout], outs[layout], recs[layout] = pf, out, rec
+    return pfs, outs, recs
+
+
+def _assert_decoded_equal(dp, dl):
+    assert set(dp) == set(dl)
+    for key in dp:
+        assert np.array_equal(np.asarray(dp[key]), np.asarray(dl[key])), key
+
+
+@pytest.mark.parametrize("cfg", [
+    ProbeConfig(inline="off_all"),
+    ProbeConfig(inline="off_all", buffer_depth=2),
+    ProbeConfig(inline="off_all", buffer_depth=2, offload=1.0),
+    ProbeConfig(inline="off_all", buffer_depth=8, offload=0.5),
+    ProbeConfig(targets=("outer",), buffer_depth=3),
+], ids=["default", "depth2", "spill_all", "spill_half", "targeted"])
+def test_packed_decode_equals_legacy(cfg):
+    pfs, outs, recs = _decoded_pair(cfg)
+    assert state_layout(recs["packed"]) == "packed"
+    assert state_layout(recs["legacy"]) == "legacy"
+    _assert_decoded_equal(decode_record(recs["packed"]),
+                          decode_record(recs["legacy"]))
+    # model outputs bit-identical across layouts
+    for a, b in zip(jax.tree_util.tree_leaves(outs["packed"]),
+                    jax.tree_util.tree_leaves(outs["legacy"])):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # spill streams identical (offloaded history reassembles the same)
+    for pid in range(pfs["packed"].assignment.n):
+        if pfs["packed"].assignment.spill[pid]:
+            assert pfs["packed"].sink.records(pid) == \
+                pfs["legacy"].sink.records(pid), pid
+
+
+def test_both_layouts_match_oracle_exactly():
+    for layout in ("packed", "legacy"):
+        pf = probe(_nested, ProbeConfig(inline="off_all", layout=layout))
+        _, rec = pf(*_ARGS)
+        dec = decode_record(rec)
+        oc = pf.oracle(*_ARGS)
+        for i, p in enumerate(pf.probe_paths()):
+            assert int(dec["totals"][i]) == oc.totals[i], (layout, p)
+            assert int(dec["calls"][i]) == oc.calls[i], (layout, p)
+            assert int(dec["starts"][i]) == oc.starts[i], (layout, p)
+            assert int(dec["ends"][i]) == oc.ends[i], (layout, p)
+        assert dec["cycle"] == oc.cycle, layout
+
+
+def test_kernel_oracle_exact_under_packed_layout():
+    """KernelOracle grid-step replay stays integer-equal with the packed
+    state threaded through the intra-kernel cycles-only scan."""
+    from repro.kernels import flash_attention as fa
+
+    def fn(q, k, v):
+        with jax.named_scope("attn"):
+            return fa.flash_attention(q, k, v, causal=True, block_q=32,
+                                      block_k=32, interpret=True)
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (jax.random.normal(kk, (1, 1, 64, 16)) for kk in ks)
+    pf = probe(fn, ProbeConfig(inline="off_all", kernel_probes=("*",)))
+    out, rec = pf(q, k, v)
+    assert np.array_equal(np.asarray(out),
+                          np.asarray(jax.jit(fn)(q, k, v)))  # bit-identity
+    dec = decode_record(rec)
+    oc = pf.oracle(q, k, v)
+    assert list(dec["totals"]) == oc.totals
+    assert list(dec["calls"]) == list(oc.calls)
+    assert dec["cycle"] == oc.cycle
+    assert any(p.endswith("/grid") for p in pf.probe_paths())
+
+
+def test_shard_oracle_exact_under_packed_layout(tiny_mesh):
+    """ShardOracle per-device replay stays integer-equal with the packed
+    state carried as the device-sharded buffer."""
+    from jax.sharding import PartitionSpec as P
+    from repro.core import mesh_probe
+
+    mesh = tiny_mesh
+
+    def body(x, w):
+        with jax.named_scope("block"):
+            y = jnp.tanh(x @ w)
+        with jax.named_scope("mix"):
+            return jax.lax.psum(y, "dev")
+
+    x = jnp.arange(8 * 4, dtype=jnp.float32).reshape(8, 4) * 0.01
+    w = jnp.full((4, 4), 0.1, jnp.float32)
+    mpf = mesh_probe(body, mesh, (P("dev"), P()), P(),
+                     ProbeConfig(inline="off_all"))
+    out, state = mpf(x, w)
+    rec = mpf.decode(state)
+    for d in range(mpf.n_devices):
+        oc = mpf.oracle(x, w, device=d)
+        dev = rec.device(d)
+        assert list(dev["totals"]) == oc.totals, d
+        assert list(dev["calls"]) == list(oc.calls), d
+        assert dev["cycle"] == oc.cycle, d
+
+
+def test_state_layout_shapes_and_bytes():
+    st_p = init_state(5, 4)
+    st_l = init_state(5, 4, layout="legacy")
+    assert st_p["cnt"].shape == (3, 5, 2)
+    assert st_p["cyc_hi"].shape == () and st_p["cyc_lo"].shape == ()
+    assert len(jax.tree_util.tree_leaves(st_p)) == 5
+    assert len(jax.tree_util.tree_leaves(st_l)) == 7
+    # packed drops the LAST plane: 8 bytes per probe
+    assert state_bytes(5, 4, layout="legacy") - state_bytes(5, 4) == 5 * 8
+    assert np.array_equal(state_totals(st_p), np.zeros(5))
+    assert np.array_equal(state_totals(st_l), np.zeros(5))
+    assert STATE_LAYOUT_VERSION >= 2
+
+
+def test_eval_cache_key_depends_on_layout_version(tmp_path, monkeypatch):
+    """On-disk DSE measurements recorded under one probe-state layout
+    must miss when the layout version changes (satellite: stale dict-
+    layout caches can never serve packed-layout runs)."""
+    import repro.core.instrument as inst
+    from repro.core.incremental import EvalCache
+
+    cache = EvalCache(str(tmp_path))
+    cache.put("k", {"a": 1}, "fp", "dev", cycles_per_step=10.0, steps=3)
+    assert cache.get("k", {"a": 1}, "fp", "dev") is not None
+    key_now = EvalCache.entry_key("k", {"a": 1}, "fp", "dev")
+    monkeypatch.setattr(inst, "STATE_LAYOUT_VERSION",
+                        inst.STATE_LAYOUT_VERSION + 1)
+    assert EvalCache.entry_key("k", {"a": 1}, "fp", "dev") != key_now
+    assert cache.get("k", {"a": 1}, "fp", "dev") is None

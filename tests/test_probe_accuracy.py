@@ -7,16 +7,17 @@ import numpy as np
 import pytest
 
 from repro.core import probe, ProbeConfig
-from repro.core.counters import c64_to_int
+from repro.core.instrument import decode_record
 
 
 def _assert_exact(pf, rec, oc):
+    dec = decode_record(rec)
     for i, p in enumerate(pf.probe_paths()):
-        assert int(c64_to_int(np.asarray(rec["totals"][i]))) == oc.totals[i], p
-        assert int(np.asarray(rec["calls"][i])) == oc.calls[i], p
-        assert int(c64_to_int(np.asarray(rec["starts"][i]))) == oc.starts[i], p
-        assert int(c64_to_int(np.asarray(rec["ends"][i]))) == oc.ends[i], p
-    assert int(c64_to_int(np.asarray(rec["cycle"]))) == oc.cycle
+        assert int(dec["totals"][i]) == oc.totals[i], p
+        assert int(dec["calls"][i]) == oc.calls[i], p
+        assert int(dec["starts"][i]) == oc.starts[i], p
+        assert int(dec["ends"][i]) == oc.ends[i], p
+    assert dec["cycle"] == oc.cycle
 
 
 def _workload_scan(x, w):

@@ -105,6 +105,62 @@ def test_probe_report_invariants(n_layers, width_pow, seed):
     assert lay is not None and lay.calls == n_layers
 
 
+# --------------------------- packed vs legacy probe-state layouts
+
+@settings(max_examples=5, deadline=None)
+@given(n_layers=st.integers(1, 4), inner=st.integers(1, 3),
+       depth=st.integers(1, 6), width_pow=st.integers(2, 4),
+       offload=st.booleans())
+def test_packed_decode_equals_legacy_on_random_hierarchies(
+        n_layers, inner, depth, width_pow, offload):
+    """Layout equivalence property: for random scope hierarchies (nested
+    scans, data-dependent while, varying ring depths, spill on/off) the
+    packed-SoA state decodes bit-for-bit identically to the legacy
+    dict-of-small-arrays reference."""
+    from repro.core import probe, ProbeConfig
+    from repro.core.instrument import decode_record
+    d = 2 ** width_pow
+
+    def fn(x, w):
+        def ib(c, _):
+            with jax.named_scope("inner"):
+                return jnp.tanh(c @ w) + c, None
+
+        def ob(c, _):
+            with jax.named_scope("layer"):
+                c, _ = jax.lax.scan(ib, c, None, length=inner)
+                with jax.named_scope("mix"):
+                    c = c @ w.T
+            return c, None
+
+        with jax.named_scope("layers"):
+            x, _ = jax.lax.scan(ob, x, None, length=n_layers)
+
+        def cond(s):
+            return jnp.sum(jnp.abs(s[0])) < 50.0
+
+        def grow(s):
+            with jax.named_scope("grow"):
+                return (s[0] * 1.5 + 0.1, s[1] + 1)
+
+        with jax.named_scope("dynamic"):
+            x, n = jax.lax.while_loop(cond, grow, (x, jnp.int32(0)))
+        return jnp.sum(x * x), n
+
+    x = jnp.ones((4, d)) * 0.05
+    w = jnp.full((d, d), 0.07)
+    cfg = ProbeConfig(inline="off_all", buffer_depth=depth,
+                      offload=1.0 if offload else 0.0)
+    decs = {}
+    for layout in ("packed", "legacy"):
+        pf = probe(fn, cfg.replace(layout=layout))
+        _, rec = pf(x, w)
+        decs[layout] = decode_record(rec)
+    for key in decs["packed"]:
+        assert np.array_equal(np.asarray(decs["packed"][key]),
+                              np.asarray(decs["legacy"][key])), key
+
+
 # ----------------------------- intra-kernel grid-step probing invariants
 
 def _kernel_probe_run(fn, args):

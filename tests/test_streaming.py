@@ -135,15 +135,14 @@ def test_no_offload_truncates_to_ring_depth():
 
 
 def test_stateful_call_accumulates_across_steps():
+    from repro.core.instrument import state_totals
     pf = probe(_workload, _CFG)
     _, rec1 = pf(*_ARGS)
-    one = np.atleast_1d(np.asarray(rec1["totals"]))
+    one = state_totals(rec1)
     state = pf.init_state()
     for _ in range(3):
         _, state = pf.stateful_call(state, *_ARGS)
-    three = np.atleast_1d(np.asarray(state["totals"]))
-    from repro.core.counters import c64_to_int
-    assert np.array_equal(c64_to_int(three), 3 * c64_to_int(one))
+    assert np.array_equal(state_totals(state), 3 * one)
 
 
 def test_session_reuses_existing_probed_function():

@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import probe, ProbeConfig
-from repro.core.counters import c64_to_int
+from repro.core.instrument import decode_record
 
 
 @pytest.mark.slow
@@ -66,9 +66,9 @@ def test_probed_production_train_step(key):
     p0, o0, m0 = jax.jit(step)(params, opt, batch)
     assert np.allclose(float(m0["loss"]), float(m1["loss"]), rtol=1e-6)
     oc = pf.oracle(params, opt, batch)
+    dec = decode_record(rec)
     for i, path in enumerate(pf.probe_paths()):
-        assert int(c64_to_int(np.asarray(rec["totals"][i]))) == \
-            oc.totals[i], path
+        assert int(dec["totals"][i]) == oc.totals[i], path
     rep = pf.report(rec)
     assert rep.bottleneck() is not None
     assert rep.timeline()
