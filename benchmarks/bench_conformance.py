@@ -1,0 +1,49 @@
+"""Conformance-sweep throughput: graphs verified per second.
+
+The seeded random-graph harness (``repro.testing``) is itself on the
+hot path of CI: the tier-1 corpus and the nightly 200-graph sweep both
+pay `build -> probe -> six invariants` per graph, so a slowdown in the
+probe pipeline (tracing, instrumentation, oracle replay, packed
+decode) shows up here first as verification throughput. Metrics:
+
+- ``graphs``       — graphs fully verified (deterministic, gated)
+- ``invariants``   — invariant checks executed across the corpus
+- ``probes``       — probe slots exercised across the corpus
+- ``us_per_call``  — wall-clock per graph (timing, gated only with
+  ``--include-timing`` on quiet machines)
+
+The seed window is fixed, so graph structures — and therefore the
+deterministic metrics — are identical on every machine.
+"""
+import time
+
+from benchmarks.common import emit
+
+# a small fixed window keeps the bench under a minute while still
+# spanning kernel and non-kernel graphs (seeds 0-3: 2 of each)
+SEEDS = (0, 1, 2, 3)
+
+
+def run():
+    from repro.testing import INVARIANTS, random_spec, run_conformance
+
+    graphs = 0
+    invariants = 0
+    probes = 0
+    t0 = time.perf_counter()
+    for seed in SEEDS:
+        stats = run_conformance(random_spec(seed))
+        graphs += 1
+        invariants += len(stats["invariants"])
+        probes += stats["n_probes"]
+    elapsed = time.perf_counter() - t0
+    us_per_graph = elapsed / graphs * 1e6
+    gps_x1000 = graphs / elapsed * 1000.0
+    emit("conformance/sweep", us_per_graph,
+         f"graphs={graphs};invariants={invariants};probes={probes};"
+         f"gps_x1000={gps_x1000:.0f}")
+    assert invariants == graphs * len(INVARIANTS), "skipped invariants"
+
+
+if __name__ == "__main__":
+    run()

@@ -37,7 +37,7 @@ LOWER_BETTER = (
     "mean_cycles", "skew", "wire_B", "err", "sub_walks",
 )
 HIGHER_BETTER = ("speedup_x1000", "saving", "exact", "cache_hits",
-                 "reduction_x1000")
+                 "reduction_x1000", "graphs", "invariants")
 
 _NUM = re.compile(r"^(-?\d+(?:\.\d+)?)(?:[%x]?)$")
 

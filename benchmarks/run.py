@@ -42,13 +42,15 @@ def main() -> None:
     except AttributeError:
         pass
 
-    from benchmarks import (bench_accuracy, bench_discrepancy,
-                            bench_distributed, bench_dse, bench_incremental,
+    from benchmarks import (bench_accuracy, bench_conformance,
+                            bench_discrepancy, bench_distributed,
+                            bench_dse, bench_incremental,
                             bench_instrument, bench_latency_impact,
                             bench_offload, bench_overhead, bench_roofline,
                             bench_streaming, common)
     benches = [
         ("Table II  (cycle accuracy, 28 designs)", bench_accuracy),
+        ("Conformance (graphs verified / second)", bench_conformance),
         ("Fig 8/9/10 (overhead + analytical model)", bench_overhead),
         ("Instrument (packed SoA probe datapath)", bench_instrument),
         ("Fig 7/11  (incremental synthesis)", bench_incremental),

@@ -103,6 +103,32 @@ class Hierarchy:
     root: ScopeNode
     eqn_info: Dict[int, EqnInfo]
     closed_jaxpr: Any
+    # Site-qualified annotations: jax's tracing caches share one traced
+    # sub-jaxpr OBJECT across call sites with identical avals (two calls
+    # of the same custom_vjp/scan body, say), so eqns inside carry one
+    # EqnInfo per walk entry path — keyed (id(eqn) -> entry -> info).
+    # ``eqn_info`` keeps the first site's row as the fallback.
+    site_info: Dict[int, Dict[str, EqnInfo]] = field(default_factory=dict)
+
+    def info_at(self, eqn, entry: str) -> Optional[EqnInfo]:
+        """EqnInfo for ``eqn`` as seen from the jaxpr walked under
+        ``entry`` (the interpreter's entry path for that jaxpr)."""
+        sites = self.site_info.get(id(eqn))
+        if sites is not None:
+            hit = sites.get(entry)
+            if hit is not None:
+                return hit
+        return self.eqn_info.get(id(eqn))
+
+    def infos_of(self, eqn) -> List[EqnInfo]:
+        """Every site's info for one eqn (for probe-presence predicates
+        that must be conservative across all call sites)."""
+        out: List[EqnInfo] = []
+        base = self.eqn_info.get(id(eqn))
+        if base is not None:
+            out.append(base)
+        out.extend(self.site_info.get(id(eqn), {}).values())
+        return out
 
     def node(self, path: str) -> Optional[ScopeNode]:
         return self.root.find(path)
@@ -204,8 +230,25 @@ def _extract_uncached(closed_jaxpr,
 
     root = ScopeNode(name="", path="", kind="root")
     eqn_info: Dict[int, EqnInfo] = {}
+    site_info: Dict[int, Dict[str, EqnInfo]] = {}
+    seen_jaxprs: Dict[int, str] = {}    # id(jaxpr) -> first walk entry
 
-    def walk(jaxpr, prefix_node: ScopeNode, counters: Dict[str, int]):
+    def put_site(eqn, info: EqnInfo, site: str):
+        site_info.setdefault(id(eqn), {})[site] = info
+
+    def walk(jaxpr, prefix_node: ScopeNode, counters: Dict[str, int],
+             entry: str):
+        # A jaxpr object revisited under a different entry is a traced
+        # body shared across call sites: its eqns' annotations go into
+        # the per-site table so each site resolves its own paths.
+        shared = seen_jaxprs.setdefault(id(jaxpr), entry) != entry
+
+        def put(eqn, info: EqnInfo):
+            if shared:
+                put_site(eqn, info, entry)
+            else:
+                eqn_info[id(eqn)] = info
+
         for eqn in jaxpr.eqns:
             segs = normalize_stack(str(eqn.source_info.name_stack))
             node = prefix_node
@@ -220,41 +263,42 @@ def _extract_uncached(closed_jaxpr,
                 lname = f"{name}#{idx}"
                 lnode = _ensure(node, lname, kind=_LOOPS[name])
                 lnode.source = lnode.source or _source_of(eqn)
-                eqn_info[id(eqn)] = EqnInfo(path=node.path,
-                                            sub_path=lnode.path)
+                put(eqn, EqnInfo(path=node.path, sub_path=lnode.path))
                 if name == "scan":
                     lnode.trip_count = int(eqn.params["length"])
-                    walk(_as_jaxpr(eqn.params["jaxpr"]), lnode, counters)
+                    walk(_as_jaxpr(eqn.params["jaxpr"]), lnode, counters,
+                         lnode.path)
                 else:
                     lnode.dynamic = True
                     walk(_as_jaxpr(eqn.params["cond_jaxpr"]),
-                         _ensure(lnode, "cond"), counters)
+                         _ensure(lnode, "cond"), counters,
+                         lnode.path + "/cond")
                     walk(_as_jaxpr(eqn.params["body_jaxpr"]),
-                         _ensure(lnode, "body"), counters)
+                         _ensure(lnode, "body"), counters,
+                         lnode.path + "/body")
             elif name == "cond":
                 idx = counters.get(node.path + "#cond", 0)
                 counters[node.path + "#cond"] = idx + 1
                 cnode = _ensure(node, f"cond#{idx}", kind="cond")
                 cnode.dynamic = True
                 cnode.source = cnode.source or _source_of(eqn)
-                eqn_info[id(eqn)] = EqnInfo(path=node.path,
-                                            sub_path=cnode.path)
+                put(eqn, EqnInfo(path=node.path, sub_path=cnode.path))
                 for bi, br in enumerate(eqn.params["branches"]):
                     walk(_as_jaxpr(br), _ensure(cnode, f"branch{bi}"),
-                         counters)
+                         counters, f"{cnode.path}/branch{bi}")
             elif name in _DESCEND and any(True for _ in cm._sub_jaxprs(eqn)):
-                eqn_info[id(eqn)] = EqnInfo(path=node.path, sub_path=None)
+                put(eqn, EqnInfo(path=node.path, sub_path=None))
                 for sub in cm._sub_jaxprs(eqn):
-                    walk(_as_jaxpr(sub), node, counters)
+                    walk(_as_jaxpr(sub), node, counters, node.path)
                     break    # only the call jaxpr
             elif (name == "pallas_call" and kernel_probes and
                   kernelprobe.matches(kernel_probes,
                                       kernelprobe.kernel_name(eqn)) and
                   (kpath := kernelprobe.extract_kernel_tree(
-                      eqn, node, _ensure, eqn_info, counters,
+                      eqn, node, _ensure, put_site, counters,
                       _source_of)) is not None):
                 # grid-step probing: the kernel subtree owns the cycles
-                eqn_info[id(eqn)] = EqnInfo(path=node.path, sub_path=kpath)
+                put(eqn, EqnInfo(path=node.path, sub_path=kpath))
             elif name == "shard_map":
                 # opaque region: costed as a black box, not probeable inside
                 idx = counters.get(node.path + "#smap", 0)
@@ -265,14 +309,14 @@ def _extract_uncached(closed_jaxpr,
                 c = cm.static_eqn_cycles(eqn)
                 snode.n_eqns += 1
                 snode.own_cycles += c
-                eqn_info[id(eqn)] = EqnInfo(path=snode.path, cycles=c)
+                put(eqn, EqnInfo(path=snode.path, cycles=c))
             else:
                 c = cm.eqn_cost(eqn).cycles
                 node.n_eqns += 1
                 node.own_cycles += c
-                eqn_info[id(eqn)] = EqnInfo(path=node.path, cycles=c)
+                put(eqn, EqnInfo(path=node.path, cycles=c))
 
-    walk(closed_jaxpr.jaxpr, root, {})
+    walk(closed_jaxpr.jaxpr, root, {}, "")
 
     def finalize(node: ScopeNode) -> Tuple[int, bool]:
         total = node.own_cycles
@@ -287,4 +331,5 @@ def _extract_uncached(closed_jaxpr,
         return total, dyn
 
     finalize(root)
-    return Hierarchy(root=root, eqn_info=eqn_info, closed_jaxpr=closed_jaxpr)
+    return Hierarchy(root=root, eqn_info=eqn_info,
+                     closed_jaxpr=closed_jaxpr, site_info=site_info)

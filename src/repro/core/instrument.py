@@ -567,16 +567,17 @@ class Instrumenter:
 
     def _jaxpr_has_probes(self, jaxpr) -> bool:
         for eqn in jaxpr.eqns:
-            info = self.h.eqn_info.get(id(eqn))
-            if info is None:
-                continue
-            if self._chain(info.path):
-                return True
-            if info.sub_path and (self._chain(info.sub_path) or
-                                  self.asg.id_of(info.sub_path) is not None or
-                                  any(p.startswith(info.sub_path + "/")
-                                      for p in self.asg.paths)):
-                return True
+            # conservative across call sites: a body shared by several
+            # sites is threaded everywhere if probed anywhere
+            for info in self.h.infos_of(eqn):
+                if self._chain(info.path):
+                    return True
+                if info.sub_path and (
+                        self._chain(info.sub_path) or
+                        self.asg.id_of(info.sub_path) is not None or
+                        any(p.startswith(info.sub_path + "/")
+                            for p in self.asg.paths)):
+                    return True
             for sub in cm._sub_jaxprs(eqn):
                 if self._jaxpr_has_probes(_as_jaxpr(sub)):
                     return True
@@ -653,7 +654,7 @@ class Instrumenter:
             return state
 
         for eqn in jaxpr.eqns:
-            info = self.h.eqn_info.get(id(eqn))
+            info = self.h.info_at(eqn, entry_path)
             path = info.path if info else cur_path
             if path != cur_path:
                 state = flush(state)

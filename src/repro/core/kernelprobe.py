@@ -103,15 +103,19 @@ def unravel(it, grid: Tuple[int, ...]) -> List[Any]:
 
 # ------------------------------------------------ extraction-time walk
 
-def extract_kernel_tree(eqn, node, ensure, eqn_info, counters,
+def extract_kernel_tree(eqn, node, ensure, put_site, counters,
                         source_of) -> Optional[str]:
     """Build the kernel subtree for one matched ``pallas_call``.
 
     Registers ``EqnInfo`` rows for every body equation (paths under the
     grid node, per-execution cycles) so the instrumenter and oracle
-    replay the same annotations the outer interpreter uses. Returns the
-    kernel node's path, or None when the grid is dynamic (the caller
-    then falls back to flat costing).
+    replay the same annotations the outer interpreter uses. Rows go into
+    the hierarchy's per-site table via ``put_site(eqn, info, site)``
+    keyed by the grid node path — kernel body jaxprs are shared between
+    identical ``pallas_call`` sites by jax's tracing cache, so each site
+    must resolve its own subtree. Returns the kernel node's path, or
+    None when the grid is dynamic (the caller then falls back to flat
+    costing).
     """
     from repro.core.hierarchy import EqnInfo, normalize_stack
 
@@ -133,6 +137,9 @@ def extract_kernel_tree(eqn, node, ensure, eqn_info, counters,
     gnode.own_cycles += dma_cycles(eqn)
     gnode.n_eqns += 1
 
+    def reg(e, info):
+        put_site(e, info, gnode.path)
+
     def walk(jaxpr, prefix):
         for e in jaxpr.eqns:
             segs = normalize_stack(str(e.source_info.name_stack))
@@ -152,21 +159,21 @@ def extract_kernel_tree(eqn, node, ensure, eqn_info, counters,
                         for b in e.params["branches"])
                 n.n_eqns += 1
                 n.own_cycles += c
-                eqn_info[id(e)] = EqnInfo(path=n.path, cycles=c)
+                reg(e, EqnInfo(path=n.path, cycles=c))
             elif name in ("scan", "while"):
                 c = cm.static_eqn_cycles(e)
                 n.n_eqns += 1
                 n.own_cycles += c
-                eqn_info[id(e)] = EqnInfo(path=n.path, cycles=c)
+                reg(e, EqnInfo(path=n.path, cycles=c))
             elif any(True for _ in cm._sub_jaxprs(e)):
                 # pjit wrappers (floor_divide, ...) — descend in place
-                eqn_info[id(e)] = EqnInfo(path=n.path)
+                reg(e, EqnInfo(path=n.path))
                 walk(_as_jaxpr(next(iter(cm._sub_jaxprs(e)))), n)
             else:
                 c = cm.eqn_cost(e).cycles
                 n.n_eqns += 1
                 n.own_cycles += c
-                eqn_info[id(e)] = EqnInfo(path=n.path, cycles=c)
+                reg(e, EqnInfo(path=n.path, cycles=c))
 
     walk(_as_jaxpr(eqn.params["jaxpr"]), gnode)
     return knode.path
@@ -265,7 +272,6 @@ def walk_step(hierarchy, body_jaxpr, grid: Tuple[int, ...], it,
     pending segment cost flushed first.
     """
     idxs = unravel(it, grid)
-    eqn_info = hierarchy.eqn_info
 
     def run(jaxpr, entry: str, env: Dict[Any, Any]):
         cur = entry
@@ -282,7 +288,9 @@ def walk_step(hierarchy, body_jaxpr, grid: Tuple[int, ...], it,
             return env.get(v, _OPAQUE)
 
         for e in jaxpr.eqns:
-            info = eqn_info.get(id(e))
+            # all body rows were registered under the grid node path —
+            # one site table per pallas_call site (shared-body safe)
+            info = hierarchy.info_at(e, entry_path)
             path = info.path if info else cur
             if path != cur:
                 flush()

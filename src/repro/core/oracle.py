@@ -132,7 +132,7 @@ class Oracle:
         cur = entry_path
 
         for eqn in jaxpr.eqns:
-            info = self.h.eqn_info.get(id(eqn))
+            info = self.h.info_at(eqn, entry_path)
             path = info.path if info else cur
             if path != cur:
                 self._transition(st, cur, path)

@@ -25,6 +25,7 @@ from typing import Any, Dict, List, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro.core import kernelprobe
 from repro.core.buffer import state_bytes
 from repro.core.pragma import ProbeConfig, ProbedFunction, probe
 
@@ -54,11 +55,13 @@ def count_sites(pf: ProbedFunction) -> Dict[str, int]:
             sites += len(a[i:]) + len(b[i:])
             transitions += 1
 
-    def walk(jaxpr, entry_path):
+    def walk(jaxpr, entry_path, site=None):
+        # ``site`` overrides the info-lookup key inside kernel subtrees,
+        # whose rows are all registered under the grid node path
         nonlocal sites, transitions, cf_sites
         cur = entry_path
         for eqn in jaxpr.eqns:
-            info = h.eqn_info.get(id(eqn))
+            info = h.info_at(eqn, site or entry_path)
             path = info.path if info else cur
             if path != cur:
                 delta(cur, path)
@@ -90,10 +93,22 @@ def count_sites(pf: ProbedFunction) -> Dict[str, int]:
                     walk(br.jaxpr,
                          f"{info.sub_path}/branch{bi}"
                          if info and info.sub_path else "")
+            elif name == "pallas_call" and \
+                    kernelprobe.probed_kernel_path(interp, eqn, info):
+                # descended kernel: the grid-replay scan is a threaded
+                # loop whose body emits at inner-scope deltas, plus the
+                # per-step grid enter/exit when the grid node is probed
+                from repro.core.hierarchy import _as_jaxpr
+                gpath = f"{info.sub_path}/{kernelprobe.GRID_SEG}"
+                cf_sites += 1
+                if asg.id_of(gpath) is not None:
+                    sites += 2
+                    transitions += 2
+                walk(_as_jaxpr(eqn.params["jaxpr"]), gpath, site=gpath)
             else:
                 import repro.core.costmodel as cm
                 for sub in cm._sub_jaxprs(eqn):
-                    walk(cm._as_jaxpr(sub), cur)
+                    walk(cm._as_jaxpr(sub), cur, site=site)
                     break
         delta(cur, entry_path)
 
@@ -142,18 +157,25 @@ def _total_eqns(jaxpr) -> int:
 
 @dataclass
 class OverheadModel:
-    """extra_eqns ~ c0 + c1*event_sites + c2*transitions + c3*cf_sites.
+    """extra_eqns ~ c0 + c1*n_probes + c2*event_sites + c3*transitions
+    + c4*cf_sites.
 
     ``cf_sites`` (threaded while/cond/scan constructs) is what makes
     control-flow-heavy configs price correctly: a threaded loop pays
     carry plumbing and per-iteration emission the flat event count
     cannot see (the seed model mispriced the while-loop config by 28%).
+    ``n_probes`` is the paper's per-probe term (Σ_i C_1 + C_2·D_i):
+    state init/decode plumbing scales with the probe count even when
+    extra probes land on scopes whose transition deltas coincide — the
+    conformance sweep found configs with identical site counts but
+    40-eqn-per-probe measured spreads (seed 33).
     """
-    coefs: Tuple[float, ...] = (0.0, 0.0, 0.0, 0.0)
+    coefs: Tuple[float, ...] = (0.0, 0.0, 0.0, 0.0, 0.0)
 
     @staticmethod
     def features(sample: Dict[str, Any]) -> List[float]:
-        return [1.0, float(sample["event_sites"]),
+        return [1.0, float(sample.get("n_probes", 0)),
+                float(sample["event_sites"]),
                 float(sample.get("transitions",
                                  sample["event_sites"])),
                 float(sample.get("cf_sites", 0))]

@@ -1,0 +1,16 @@
+"""Conformance tooling: seeded random model graphs + invariant harness.
+
+``graphgen`` turns integer seeds into jittable model graphs described
+by JSON-round-trippable ``GraphSpec``s; ``conformance`` asserts the six
+probe exactness invariants on any spec; ``sweep`` runs seed corpora and
+prints ready-to-paste repro commands for failures.
+"""
+from repro.testing.graphgen import (BlockSpec, GraphSpec, build,
+                                    random_spec)
+from repro.testing.conformance import (INVARIANTS, ConformanceError,
+                                       repro_command, run_conformance)
+
+__all__ = [
+    "BlockSpec", "GraphSpec", "build", "random_spec",
+    "INVARIANTS", "ConformanceError", "repro_command", "run_conformance",
+]

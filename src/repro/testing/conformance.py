@@ -1,0 +1,288 @@
+"""Single-call conformance harness: every exactness contract, one graph.
+
+``run_conformance(spec)`` drives one :class:`~repro.testing.graphgen.
+GraphSpec` through the full probe pipeline and asserts the six
+invariants the suite otherwise enforces piecemeal:
+
+1. **bit-identity** — probed outputs equal ``jax.jit(fn)`` outputs
+   bit-for-bit (the paper's non-intrusiveness claim).
+2. **telescoping** — decoded intervals nest: ``0 <= start <= end <=
+   cycle``, every ring row has ``s <= e``, fully-observed histories sum
+   exactly to the probe's total, ancestors bound descendants.
+3. **oracle equality** — device counters equal the independent Python
+   re-interpreter integer-for-integer (Table II, 100% accuracy).
+4. **packed == legacy** — both state layouts decode to the same record.
+5. **session exactness** — N identical ``ProbeSession`` steps aggregate
+   to exactly N x the one-shot counters.
+6. **overhead bound** — the fitted :class:`~repro.core.overhead.
+   OverheadModel` predicts instrumented-eqn deltas within tolerance.
+
+Failures raise :class:`ConformanceError` carrying the spec JSON and a
+ready-to-paste repro command, so a CI line is a full reproduction.
+
+CLI (the repro command format printed on failure)::
+
+    PYTHONPATH=src python -m repro.testing.conformance --seed 1234
+    PYTHONPATH=src python -m repro.testing.conformance --spec '<json>'
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.testing.graphgen import GraphSpec, build, random_spec
+
+INVARIANTS = ("bit_identity", "telescoping", "oracle_equality",
+              "packed_vs_legacy", "session_exactness", "overhead_bound")
+
+# overhead-model tolerance: relative to the measured delta with an
+# absolute floor (tiny graphs have single-digit extra-eqn counts)
+OVERHEAD_REL_TOL = 0.15
+OVERHEAD_ABS_TOL = 8.0
+SESSION_STEPS = 3
+
+
+def repro_command(spec: GraphSpec) -> str:
+    return ("PYTHONPATH=src python -m repro.testing.conformance "
+            f"--seed {spec.seed}")
+
+
+class ConformanceError(AssertionError):
+    """One invariant failed; message embeds seed, spec and repro cmd."""
+
+    def __init__(self, spec: GraphSpec, invariant: str, detail: str):
+        self.spec = spec
+        self.invariant = invariant
+        super().__init__(
+            f"conformance invariant {invariant!r} failed for seed "
+            f"{spec.seed}\n  detail: {detail}\n  spec: {spec.to_json()}\n"
+            f"  repro: {repro_command(spec)}")
+
+
+def _check(spec: GraphSpec, invariant: str, ok: bool, detail: str):
+    if not ok:
+        raise ConformanceError(spec, invariant, detail)
+
+
+# ----------------------------------------------------------- invariants
+
+def _full_durations(pf, dec, pid: int) -> Optional[List[int]]:
+    """Per-call durations for probe ``pid`` when every call was observed
+    (spilled rings reassembled from the sink + in-ring remainder; else
+    only when the ring never wrapped). None = partially observed."""
+    asg = pf.assignment
+    calls = int(dec["calls"][pid])
+    ring = np.asarray(dec["ring"][pid])
+    if asg.spill[pid]:
+        durs = [int(e) - int(s) for s, e in pf.sink.records(pid)]
+        rem = calls % asg.depth
+        durs += [int(e) - int(s) for s, e in ring[:rem]]
+        return durs
+    if calls <= asg.depth:
+        return [int(e) - int(s) for s, e in ring[:calls]]
+    return None
+
+
+def check_bit_identity(spec: GraphSpec, fn, args, pf, out) -> None:
+    import jax
+    out0 = jax.jit(fn)(*args)
+    leaves = jax.tree_util.tree_leaves(out)
+    leaves0 = jax.tree_util.tree_leaves(out0)
+    _check(spec, "bit_identity", len(leaves) == len(leaves0),
+           f"leaf count {len(leaves)} != {len(leaves0)}")
+    for i, (a, b) in enumerate(zip(leaves, leaves0)):
+        _check(spec, "bit_identity",
+               np.array_equal(np.asarray(a), np.asarray(b)),
+               f"output leaf {i} differs: probed={a!r} unprobed={b!r}")
+
+
+def check_telescoping(spec: GraphSpec, pf, dec) -> None:
+    cycle = int(dec["cycle"])
+    paths = pf.probe_paths()
+    _check(spec, "telescoping", cycle >= 0, f"negative cycle {cycle}")
+    for i, p in enumerate(paths):
+        calls = int(dec["calls"][i])
+        s, e, t = int(dec["starts"][i]), int(dec["ends"][i]), \
+            int(dec["totals"][i])
+        if calls == 0:
+            _check(spec, "telescoping", (s, e, t) == (0, 0, 0),
+                   f"{p}: uncalled probe has nonzero counters {(s, e, t)}")
+            continue
+        _check(spec, "telescoping", 0 <= s <= e <= cycle,
+               f"{p}: interval [{s}, {e}] outside [0, {cycle}]")
+        _check(spec, "telescoping", 0 <= t <= cycle,
+               f"{p}: total {t} outside [0, {cycle}]")
+        durs = _full_durations(pf, dec, i)
+        ring = np.asarray(dec["ring"][i])
+        for rs, re_ in ring[:min(calls, pf.assignment.depth)]:
+            _check(spec, "telescoping", int(rs) <= int(re_),
+                   f"{p}: ring row [{int(rs)}, {int(re_)}] reversed")
+        if durs is not None:
+            _check(spec, "telescoping", len(durs) == calls,
+                   f"{p}: {len(durs)} observed durations != {calls} calls")
+            _check(spec, "telescoping", sum(durs) == t,
+                   f"{p}: observed durations sum {sum(durs)} != total {t}")
+        # ancestors bound descendants (same clock, nested scopes)
+        for j, q in enumerate(paths):
+            if q.startswith(p + "/") and int(dec["calls"][j]) > 0:
+                _check(spec, "telescoping",
+                       int(dec["totals"][j]) <= t,
+                       f"{q}: child total {int(dec['totals'][j])} > "
+                       f"parent {p} total {t}")
+                _check(spec, "telescoping",
+                       int(dec["starts"][j]) >= s and
+                       int(dec["ends"][j]) <= e,
+                       f"{q}: child interval escapes parent {p}")
+
+
+def check_oracle_equality(spec: GraphSpec, pf, dec, args) -> None:
+    oc = pf.oracle(*args)
+    for i, p in enumerate(pf.probe_paths()):
+        for key, ov in (("totals", oc.totals[i]), ("calls", oc.calls[i]),
+                        ("starts", oc.starts[i]), ("ends", oc.ends[i])):
+            _check(spec, "oracle_equality", int(dec[key][i]) == ov,
+                   f"{p}: device {key}={int(dec[key][i])} != oracle {ov}")
+    _check(spec, "oracle_equality", int(dec["cycle"]) == oc.cycle,
+           f"cycle: device {int(dec['cycle'])} != oracle {oc.cycle}")
+    if spec.has_kernel:
+        # KernelOracle view: grid rows must cover their kernel scope.
+        # A saturated probe budget may legitimately prune the grid
+        # candidate (the allocator prefers outer scopes); only when
+        # slots remained free is a missing grid probe an instrumenter
+        # gap rather than an allocation decision.
+        grid_pids = [i for i, p in enumerate(pf.probe_paths())
+                     if p.endswith("/grid")]
+        budget_full = pf.assignment.n >= spec.max_probes
+        _check(spec, "oracle_equality", grid_pids or budget_full,
+               "kernel graph produced no grid probes despite free slots")
+        for i in grid_pids:
+            _check(spec, "oracle_equality", oc.calls[i] > 0,
+                   f"{pf.probe_paths()[i]}: grid probe never entered")
+
+
+def check_packed_vs_legacy(spec: GraphSpec, fn, args, dec) -> None:
+    import jax
+    from repro.core import probe
+    from repro.core.instrument import decode_record
+    pf2 = probe(fn, spec.probe_config().replace(layout="legacy"))
+    _, rec2 = pf2(*args)
+    dec2 = decode_record(jax.device_get(rec2))
+    for key in ("cycle", "starts", "ends", "totals", "calls", "ring"):
+        _check(spec, "packed_vs_legacy",
+               np.array_equal(np.asarray(dec[key]), np.asarray(dec2[key])),
+               f"decoded {key!r} differs between packed and legacy")
+
+
+def check_session_exactness(spec: GraphSpec, fn, args, dec,
+                            steps: int = SESSION_STEPS) -> None:
+    from repro.core import ProbeSession
+    from repro.core.streaming import StreamSnapshot  # noqa: F401 (doc)
+    with ProbeSession(fn, spec.probe_config().replace(offload=1.0)) as s:
+        for _ in range(steps):
+            s.step(*args)
+        snap = s.snapshot()
+    for pid, path in enumerate(snap.paths):
+        row = snap.rows[pid]
+        want_calls = steps * int(dec["calls"][pid])
+        want_total = steps * int(dec["totals"][pid])
+        _check(spec, "session_exactness", row.calls == want_calls,
+               f"{path}: session calls {row.calls} != "
+               f"{steps} x one-shot {int(dec['calls'][pid])}")
+        _check(spec, "session_exactness", row.total_cycles == want_total,
+               f"{path}: session total {row.total_cycles} != "
+               f"{steps} x one-shot {int(dec['totals'][pid])}")
+
+
+def check_overhead_bound(spec: GraphSpec, fn, args) -> int:
+    from repro.core.overhead import OverheadModel, measure_overhead
+    base = spec.probe_config()
+    variants = [base.replace(max_probes=m) for m in (2, 3, 4, 6)]
+    variants.append(base.replace(max_probes=50, buffer_depth=2))
+    variants.append(base)
+    samples = [measure_overhead(fn, args, v) for v in variants]
+    model = OverheadModel.fit(samples)
+    for v, smp in zip(variants, samples):
+        pred = model.predict_eqns(smp)
+        actual = float(smp["extra_eqns"])
+        tol = max(OVERHEAD_REL_TOL * abs(actual), OVERHEAD_ABS_TOL)
+        _check(spec, "overhead_bound", abs(pred - actual) <= tol,
+               f"max_probes={v.max_probes} depth={v.buffer_depth}: "
+               f"predicted {pred:.1f} vs measured {actual:.0f} "
+               f"(tol {tol:.1f})")
+    return len(samples)
+
+
+# -------------------------------------------------------------- harness
+
+def run_conformance(spec: GraphSpec,
+                    invariants: Sequence[str] = INVARIANTS
+                    ) -> Dict[str, Any]:
+    """Assert the selected invariants for one graph; returns summary
+    stats (probe count, cycle span, invariants checked) on success."""
+    import jax
+    from repro.core import probe
+    from repro.core.instrument import decode_record
+
+    unknown = set(invariants) - set(INVARIANTS)
+    if unknown:
+        raise ValueError(f"unknown invariants: {sorted(unknown)}")
+    fn, args = build(spec)
+    pf = probe(fn, spec.probe_config())
+    out, rec = pf(*args)
+    dec = decode_record(jax.device_get(rec))
+    checked: List[str] = []
+    if "bit_identity" in invariants:
+        check_bit_identity(spec, fn, args, pf, out)
+        checked.append("bit_identity")
+    if "telescoping" in invariants:
+        check_telescoping(spec, pf, dec)
+        checked.append("telescoping")
+    if "oracle_equality" in invariants:
+        check_oracle_equality(spec, pf, dec, args)
+        checked.append("oracle_equality")
+    if "packed_vs_legacy" in invariants:
+        check_packed_vs_legacy(spec, fn, args, dec)
+        checked.append("packed_vs_legacy")
+    if "session_exactness" in invariants:
+        check_session_exactness(spec, fn, args, dec)
+        checked.append("session_exactness")
+    if "overhead_bound" in invariants:
+        check_overhead_bound(spec, fn, args)
+        checked.append("overhead_bound")
+    return {
+        "seed": spec.seed,
+        "n_probes": pf.assignment.n,
+        "cycle": int(dec["cycle"]),
+        "has_kernel": spec.has_kernel,
+        "invariants": tuple(checked),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    g = ap.add_mutually_exclusive_group(required=True)
+    g.add_argument("--seed", type=int, help="run random_spec(seed)")
+    g.add_argument("--spec", type=str, help="run an explicit GraphSpec "
+                                            "JSON document")
+    ap.add_argument("--invariants", type=str, default=",".join(INVARIANTS),
+                    help="comma-separated subset to check")
+    args = ap.parse_args(argv)
+    spec = (GraphSpec.from_json(args.spec) if args.spec is not None
+            else random_spec(args.seed))
+    inv = tuple(s for s in args.invariants.split(",") if s)
+    try:
+        stats = run_conformance(spec, inv)
+    except ConformanceError as e:
+        print(e, file=sys.stderr)
+        return 1
+    print(f"seed {stats['seed']}: OK — {stats['n_probes']} probes, "
+          f"{stats['cycle']} cycles, "
+          f"invariants: {', '.join(stats['invariants'])}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

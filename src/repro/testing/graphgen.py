@@ -1,0 +1,313 @@
+"""Seeded random model-graph generator (the SPRING-style sweep subject).
+
+RealProbe's evaluation hand-picks 28 designs; profiling *randomly
+interconnected* networks is what exposes the topologies hand-picked
+benchmarks miss. This module turns a single integer seed into a
+jittable function whose structure is drawn from the real model building
+blocks (``models/attention.py``, ``models/ssm.py``, ``models/moe.py``,
+``models/layers.py``) composed under randomized control flow
+(``lax.scan``, ``jax.checkpoint``, ``lax.cond``, ``lax.while_loop``,
+nested ``jax.jit`` and optionally probed ``pallas_call`` kernels from
+``kernels/ops.py``).
+
+Every graph is fully described by a :class:`GraphSpec` that round-trips
+through JSON, so any conformance failure is reproducible from its seed:
+
+    spec = random_spec(1234)
+    fn, args = build(spec)
+    assert GraphSpec.from_json(spec.to_json()) == spec
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import random
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pragma import ProbeConfig
+
+# block families drawn from the real model code (KERNEL_KINDS execute a
+# pallas_call in interpret mode and force kernel grid-step probing)
+BLOCK_KINDS = ("mlp", "attn", "ssm", "moe", "elementwise")
+KERNEL_KINDS = ("flash_kernel", "ssd_kernel")
+WRAPPERS = ("none", "scan", "remat", "cond", "jit", "while", "scan_cond")
+# wrappers safe around a pallas_call (kept conservative: the kernel body
+# is itself a grid loop; scan/while around it multiply interpret cost)
+KERNEL_WRAPPERS = ("none", "jit")
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """One randomly drawn block: a building-block kind plus the control
+    flow construct wrapped around it (``length`` = scan/while trips)."""
+    kind: str
+    wrapper: str = "none"
+    length: int = 1
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphSpec:
+    """Complete, JSON-serializable description of one random graph.
+
+    ``seed`` drives both the structure draw (``random_spec``) and the
+    parameter/input values (``build``), so the spec alone reproduces the
+    exact program AND the exact data of a failing conformance run.
+    """
+    seed: int
+    batch: int = 2
+    seq: int = 16
+    d_model: int = 16
+    blocks: Tuple[BlockSpec, ...] = ()
+    buffer_depth: int = 4
+    offload: float = 0.0
+    max_probes: int = 50
+
+    @property
+    def has_kernel(self) -> bool:
+        return any(b.kind in KERNEL_KINDS for b in self.blocks)
+
+    def probe_config(self) -> ProbeConfig:
+        return ProbeConfig(inline="off_all",
+                           buffer_depth=self.buffer_depth,
+                           offload=self.offload,
+                           max_probes=self.max_probes,
+                           kernel_probes=("*",) if self.has_kernel else ())
+
+    # ------------------------------------------------- JSON round-trip
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["blocks"] = [b.to_dict() for b in self.blocks]
+        return d
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "GraphSpec":
+        d = dict(d)
+        d["blocks"] = tuple(BlockSpec(**b) for b in d.get("blocks", ()))
+        return cls(**d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "GraphSpec":
+        return cls.from_dict(json.loads(s))
+
+
+def random_spec(seed: int, *, max_blocks: int = 5,
+                allow_kernels: bool = True) -> GraphSpec:
+    """Deterministically draw a GraphSpec from an integer seed.
+
+    Uses ``random.Random`` (not numpy / jax) so structure draws are
+    stable across library versions. At most one kernel block per graph
+    keeps interpret-mode pallas cost bounded.
+    """
+    rng = random.Random(int(seed))
+    batch = rng.choice((1, 2))
+    seq = rng.choice((16, 32))
+    d_model = rng.choice((16, 32))
+    n_blocks = rng.randint(2, max_blocks)
+    blocks: List[BlockSpec] = []
+    kernel_used = False
+    for _ in range(n_blocks):
+        if allow_kernels and not kernel_used and rng.random() < 0.2:
+            kind = rng.choice(KERNEL_KINDS)
+            kernel_used = True
+            wrapper = rng.choice(KERNEL_WRAPPERS)
+            length = 1
+        else:
+            kind = rng.choice(BLOCK_KINDS)
+            wrapper = rng.choice(WRAPPERS)
+            length = rng.randint(2, 3) if wrapper in ("scan", "while",
+                                                      "scan_cond") else 1
+        blocks.append(BlockSpec(kind=kind, wrapper=wrapper, length=length))
+    return GraphSpec(
+        seed=int(seed), batch=batch, seq=seq, d_model=d_model,
+        blocks=tuple(blocks),
+        buffer_depth=rng.choice((2, 4)),
+        offload=rng.choice((0.0, 1.0)),
+        max_probes=rng.choice((16, 50)),
+    )
+
+
+# ------------------------------------------------------------ builders
+
+def _moe_cfg(d_model: int):
+    """Tiny MoE ModelConfig for the standalone `_moe_local` body (the
+    capacity impl with generous capacity so no token is dropped)."""
+    from repro.configs.registry import smoke_config
+    cfg = smoke_config("granite-moe-1b-a400m")
+    return cfg.replace(
+        d_model=d_model,
+        moe=dataclasses.replace(cfg.moe, impl="capacity",
+                                capacity_factor=8.0, dense_residual=False))
+
+
+def _block_params(spec: GraphSpec, i: int, kind: str, key) -> Dict[str, Any]:
+    D = spec.d_model
+    F = 2 * D
+    ks = jax.random.split(key, 8)
+    s = 1.0 / jnp.sqrt(jnp.float32(D))
+
+    def w(k, shape, scale=None):
+        sc = s if scale is None else scale
+        return jax.random.normal(k, shape, jnp.float32) * sc
+
+    if kind == "mlp":
+        return {"wi": w(ks[0], (D, F)), "wg": w(ks[1], (D, F)),
+                "wo": w(ks[2], (F, D), 1.0 / jnp.sqrt(jnp.float32(F)))}
+    if kind in ("attn", "flash_kernel"):
+        return {"wq": w(ks[0], (D, D)), "wk": w(ks[1], (D, D)),
+                "wv": w(ks[2], (D, D)), "wo": w(ks[3], (D, D))}
+    if kind in ("ssm", "ssd_kernel"):
+        N = 8
+        return {"wx": w(ks[0], (D, D)), "wa": w(ks[1], (D, 2)),
+                "wb": w(ks[2], (D, N)), "wc": w(ks[3], (D, N)),
+                "wo": w(ks[4], (D, D))}
+    if kind == "moe":
+        E, FF = 4, 16
+        return {"router": w(ks[0], (D, E)),
+                "wi": w(ks[1], (E, D, FF)), "wg": w(ks[2], (E, D, FF)),
+                "wo": w(ks[3], (E, FF, D),
+                        1.0 / jnp.sqrt(jnp.float32(FF)))}
+    if kind == "elementwise":
+        return {"scale": jnp.zeros((D,), jnp.float32),
+                "gate": w(ks[0], (D, D))}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _apply_block(kind: str, p: Dict[str, Any], x, spec: GraphSpec):
+    """x: (B, S, D) -> (B, S, D), contractive (bounded activations +
+    damped residual) so stacked/looped blocks stay numerically tame."""
+    B, S, D = x.shape
+    if kind == "mlp":
+        from repro.models.layers import mlp_apply
+        return x + 0.5 * mlp_apply(p, jnp.tanh(x))
+    if kind == "attn":
+        from repro.models.attention import causal_flash_xla
+        H, HD = 2, D // 2
+        q = (x @ p["wq"]).reshape(B, S, H, HD)
+        k = (x @ p["wk"]).reshape(B, S, H, HD)
+        v = (x @ p["wv"]).reshape(B, S, H, HD)
+        o = causal_flash_xla(q, k, v, S // 2, S // 2)
+        return x + 0.5 * (o.reshape(B, S, D) @ p["wo"])
+    if kind == "flash_kernel":
+        from repro.kernels import ops as kops
+        H, HD = 2, D // 2
+        q = (x @ p["wq"]).reshape(B, S, H, HD).transpose(0, 2, 1, 3)
+        k = (x @ p["wk"]).reshape(B, S, H, HD).transpose(0, 2, 1, 3)
+        v = (x @ p["wv"]).reshape(B, S, H, HD).transpose(0, 2, 1, 3)
+        o = kops.flash_attention(q, k, v, causal=True, block_q=S // 2,
+                                 block_k=S // 2, pipeline=1, interpret=True)
+        o = o.transpose(0, 2, 1, 3).reshape(B, S, D)
+        return x + 0.5 * (o @ p["wo"])
+    if kind == "ssm":
+        from repro.models.ssm import ssd_chunked_xla
+        H, P = 2, D // 2
+        xs = jnp.tanh(x @ p["wx"]).reshape(B, S, H, P)
+        a = -jnp.abs(x @ p["wa"]) * 0.2                      # (B, S, H)
+        b = (x @ p["wb"])[:, :, None, :] * 0.5               # (B, S, 1, N)
+        c = (x @ p["wc"])[:, :, None, :] * 0.5
+        y = ssd_chunked_xla(xs, a, b, c, chunk=S // 2, h_per_g=H)
+        return x + 0.5 * (y.reshape(B, S, D) @ p["wo"])
+    if kind == "ssd_kernel":
+        from repro.kernels import ops as kops
+        H, P = 2, D // 2
+        xs = jnp.tanh(x @ p["wx"]).reshape(B, S, H, P)
+        a = -jnp.abs(x @ p["wa"]) * 0.2
+        b = (x @ p["wb"])[:, :, None, :] * 0.5
+        c = (x @ p["wc"])[:, :, None, :] * 0.5
+        y = kops.ssd_scan(xs, a, b, c, chunk=S // 2, pipeline=1,
+                          interpret=True)
+        return x + 0.5 * (y.reshape(B, S, D) @ p["wo"])
+    if kind == "moe":
+        from repro.models.moe import _moe_local
+        cfg = _moe_cfg(D)
+        out, aux = _moe_local(jnp.tanh(x), p["router"], p["wi"], p["wg"],
+                              p["wo"], cfg)
+        return x + 0.5 * out + 0.0 * aux
+    if kind == "elementwise":
+        from repro.models.layers import rmsnorm
+        y = rmsnorm(x, p["scale"], 1e-6)
+        return x + 0.5 * jnp.tanh(y @ p["gate"]) * jax.nn.sigmoid(y)
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _apply_wrapped(blk: BlockSpec, p: Dict[str, Any], x, spec: GraphSpec):
+    def body(v):
+        return _apply_block(blk.kind, p, v, spec)
+
+    if blk.wrapper == "none":
+        return body(x)
+    if blk.wrapper == "scan":
+        def sbody(c, _):
+            with jax.named_scope("step"):
+                return body(c), None
+        y, _ = jax.lax.scan(sbody, x, None, length=blk.length)
+        return y
+    if blk.wrapper == "remat":
+        return jax.checkpoint(body)(x)
+    if blk.wrapper == "jit":
+        return jax.jit(body)(x)
+    if blk.wrapper == "cond":
+        def heavy(v):
+            with jax.named_scope("heavy"):
+                return body(v)
+
+        def light(v):
+            with jax.named_scope("light"):
+                return v * 1.01
+        return jax.lax.cond(jnp.sum(x) > 0, heavy, light, x)
+    if blk.wrapper == "while":
+        def wcond(s):
+            return s[1] < blk.length
+
+        def wbody(s):
+            with jax.named_scope("iter"):
+                return body(s[0]), s[1] + 1
+        y, _ = jax.lax.while_loop(wcond, wbody, (x, jnp.int32(0)))
+        return y
+    if blk.wrapper == "scan_cond":
+        # the lax.cond-under-scan composition called out in the issue:
+        # a per-iteration data-dependent branch inside a probed loop
+        def sbody(c, _):
+            def heavy(v):
+                with jax.named_scope("heavy"):
+                    return body(v)
+
+            def light(v):
+                with jax.named_scope("light"):
+                    return v * 1.01
+            with jax.named_scope("step"):
+                c = jax.lax.cond(jnp.sum(c) > 0, heavy, light, c)
+            return c, None
+        y, _ = jax.lax.scan(sbody, x, None, length=blk.length)
+        return y
+    raise ValueError(f"unknown wrapper {blk.wrapper!r}")
+
+
+def build(spec: GraphSpec):
+    """Materialize ``spec`` into ``(fn, args)``: a jittable function
+    plus deterministic concrete inputs. ``fn(x, params)`` returns a
+    scalar so probed-vs-unprobed bit-identity is a one-leaf compare of
+    the full dataflow."""
+    key = jax.random.PRNGKey(spec.seed)
+    params = [_block_params(spec, i, b.kind, jax.random.fold_in(key, i))
+              for i, b in enumerate(spec.blocks)]
+    x0 = (jax.random.normal(jax.random.fold_in(key, 10_007),
+                            (spec.batch, spec.seq, spec.d_model),
+                            jnp.float32) * 0.1)
+
+    def fn(x, params):
+        for i, blk in enumerate(spec.blocks):
+            with jax.named_scope(f"b{i}_{blk.kind}"):
+                x = _apply_wrapped(blk, params[i], x, spec)
+        with jax.named_scope("head"):
+            return jnp.sum(x * x)
+
+    return fn, (x0, params)

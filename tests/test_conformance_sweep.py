@@ -1,0 +1,118 @@
+"""Fixed seeded conformance corpus (the paper's evaluation table at
+repro scale): every graph in the corpus must pass all six probe
+invariants. The corpus is frozen — seed S always builds the same graph
+(``random_spec`` uses ``random.Random``), so a failure here is
+reproducible with the printed command from any machine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.testing import (GraphSpec, build, random_spec,
+                           run_conformance)
+from repro.testing.conformance import INVARIANTS
+
+# the tier-1 fast subset keeps a handful of graphs under the CI
+# timeout; the remainder of the 40-graph corpus runs with the slow
+# suite (and nightly's 200-graph sweep extends the same sequence)
+FAST_SEEDS = tuple(range(8))
+SLOW_SEEDS = tuple(range(8, 40))
+CORPUS = FAST_SEEDS + SLOW_SEEDS
+
+
+@pytest.mark.parametrize(
+    "seed",
+    list(FAST_SEEDS) + [pytest.param(s, marks=pytest.mark.slow)
+                        for s in SLOW_SEEDS])
+def test_corpus_graph_conformance(seed):
+    stats = run_conformance(random_spec(seed))
+    assert stats["invariants"] == INVARIANTS     # zero skipped invariants
+    assert stats["n_probes"] > 0
+
+
+def test_spec_json_roundtrip_and_determinism():
+    for seed in range(200):
+        spec = random_spec(seed)
+        assert GraphSpec.from_json(spec.to_json()) == spec
+        assert random_spec(seed) == spec         # draw is deterministic
+        assert spec.blocks                       # never an empty graph
+
+
+def test_corpus_covers_the_structure_space():
+    """The frozen corpus must actually exercise the generator's whole
+    vocabulary — every block kind and every wrapper appears, and both
+    kernel and non-kernel graphs are present."""
+    kinds, wrappers, kernels = set(), set(), set()
+    for seed in CORPUS:
+        spec = random_spec(seed)
+        for b in spec.blocks:
+            kinds.add(b.kind)
+            wrappers.add(b.wrapper)
+        kernels.add(spec.has_kernel)
+    assert kinds >= {"mlp", "attn", "ssm", "moe", "elementwise"}
+    assert "flash_kernel" in kinds or "ssd_kernel" in kinds
+    assert wrappers >= {"none", "scan", "remat", "cond", "jit", "while",
+                        "scan_cond"}
+    assert kernels == {True, False}
+
+
+def test_build_is_deterministic_per_spec():
+    spec = random_spec(7)
+    fn1, args1 = build(spec)
+    fn2, args2 = build(spec)
+    for a, b in zip(jax.tree_util.tree_leaves(args1),
+                    jax.tree_util.tree_leaves(args2)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert np.array_equal(np.asarray(jax.jit(fn1)(*args1)),
+                          np.asarray(jax.jit(fn2)(*args2)))
+
+
+# ----------------------------------------------------------------------
+# Regression pinned to the discovering GraphSpec: random_spec(5) put the
+# same flash-attention custom_vjp (and its scan bodies) at two call
+# sites; jax's tracing cache shares the traced body OBJECT between
+# sites, and the id-keyed EqnInfo table attributed both sites' inner
+# equations to whichever site was walked last (oracle crash / silently
+# double-counted device counters). Minimal form: one module-level scan
+# body traced at two scopes.
+
+def _shared_scan_body(c, _):
+    with jax.named_scope("inner"):
+        return jnp.tanh(c) + 0.01, None
+
+
+def test_shared_subjaxpr_per_site_attribution_seed5():
+    def fn(x):
+        with jax.named_scope("first"):
+            a, _ = jax.lax.scan(_shared_scan_body, x, None, length=2)
+        with jax.named_scope("second"):
+            b, _ = jax.lax.scan(_shared_scan_body, a, None, length=3)
+        return jnp.sum(a * b)
+
+    from repro.core import ProbeConfig, probe
+    from repro.core.instrument import decode_record
+    pf = probe(fn, ProbeConfig(inline="off_all"))
+    out, rec = pf(*(jnp.ones((4, 8)) * 0.1,))
+    paths = pf.probe_paths()
+    # both sites' loop bodies are probed independently
+    fi = paths.index("first/scan#0/inner")
+    si = paths.index("second/scan#0/inner")
+    dec = decode_record(jax.device_get(rec))
+    assert int(dec["calls"][fi]) == 2
+    assert int(dec["calls"][si]) == 3
+    # the shared body really was deduplicated by jax — the hierarchy
+    # must carry per-site rows for it (the fixed failure mode)
+    assert pf.hierarchy.site_info, "expected a shared traced body"
+    # and the device counters still match the oracle exactly
+    oc = pf.oracle(jnp.ones((4, 8)) * 0.1)
+    for i, p in enumerate(paths):
+        assert int(dec["totals"][i]) == oc.totals[i], p
+        assert int(dec["calls"][i]) == oc.calls[i], p
+    assert int(dec["cycle"]) == oc.cycle
+
+
+@pytest.mark.slow
+def test_discovering_spec_seed5_full_conformance():
+    """The exact GraphSpec that surfaced the shared-body bug."""
+    stats = run_conformance(random_spec(5))
+    assert stats["invariants"] == INVARIANTS

@@ -1,4 +1,6 @@
 """Property-based tests (hypothesis) on system invariants."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +10,13 @@ pytest.importorskip(
     "hypothesis",
     reason="dev-only dependency — pip install -r requirements-dev.txt")
 from hypothesis import assume, given, settings, strategies as st
+
+# example-count profiles: the tier-1 run keeps the conformance property
+# cheap; nightly (HYPOTHESIS_PROFILE=nightly) widens the random-graph
+# search the same way the 200-seed sweep widens the fixed corpus
+settings.register_profile("ci", max_examples=3, deadline=None)
+settings.register_profile("nightly", max_examples=30, deadline=None)
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))
 
 from repro.core.counters import (c64, c64_add, c64_add_int, c64_sub,
                                  c64_to_int)
@@ -231,3 +240,66 @@ def test_ssd_grid_step_cycles_sum_to_kernel_scope(chunk, pp, L):
     _assert_grid_sum_invariant(pf, rows)
     assert np.array_equal(np.asarray(out),
                           np.asarray(jax.jit(fn)(x, a, b, c)))
+
+
+# ------------------------- seeded model-graph conformance (graphgen)
+
+from repro.testing import GraphSpec, run_conformance  # noqa: E402
+from repro.testing.graphgen import (BLOCK_KINDS, KERNEL_KINDS,  # noqa: E402
+                                    KERNEL_WRAPPERS, WRAPPERS, BlockSpec)
+
+_LOOPED = ("scan", "while", "scan_cond")
+
+
+@st.composite
+def graph_specs(draw, allow_kernels=True):
+    """Hypothesis-native GraphSpec strategy: unlike ``random_spec`` (a
+    fixed seed->spec map) this shrinks — a failing example minimizes to
+    the smallest graph exhibiting the bug. At most one kernel block per
+    graph (mirrors the corpus generator's constraint)."""
+    n = draw(st.integers(1, 4))
+    blocks = []
+    kernel_left = allow_kernels
+    for _ in range(n):
+        if kernel_left and draw(st.integers(0, 4)) == 0:
+            kernel_left = False
+            blocks.append(BlockSpec(
+                kind=draw(st.sampled_from(KERNEL_KINDS)),
+                wrapper=draw(st.sampled_from(KERNEL_WRAPPERS))))
+            continue
+        wrapper = draw(st.sampled_from(WRAPPERS))
+        blocks.append(BlockSpec(
+            kind=draw(st.sampled_from(BLOCK_KINDS)),
+            wrapper=wrapper,
+            length=draw(st.integers(2, 3)) if wrapper in _LOOPED else 1))
+    return GraphSpec(
+        seed=draw(st.integers(0, 2 ** 31 - 1)),
+        batch=draw(st.sampled_from([1, 2])),
+        seq=draw(st.sampled_from([16, 32])),
+        d_model=draw(st.sampled_from([16, 32])),
+        blocks=tuple(blocks),
+        buffer_depth=draw(st.sampled_from([2, 4])),
+        offload=draw(st.sampled_from([0.0, 1.0])),
+        max_probes=draw(st.sampled_from([16, 50])),
+    )
+
+
+@settings(max_examples=75, deadline=None)
+@given(graph_specs())
+def test_graphspec_json_roundtrip_any_spec(spec):
+    """Serialization totality: EVERY representable spec (not just
+    random_spec's image) survives the JSON round trip intact."""
+    assert GraphSpec.from_json(spec.to_json()) == spec
+    assert spec.has_kernel == any(b.kind in KERNEL_KINDS
+                                  for b in spec.blocks)
+
+
+# example count comes from the loaded profile (ci=3 / nightly=30); the
+# fast invariant subset keeps tier-1 inside its timeout — the fixed
+# corpus + nightly sweep cover the expensive re-probe invariants
+@settings(deadline=None)
+@given(graph_specs())
+def test_random_graph_probe_conformance(spec):
+    stats = run_conformance(
+        spec, ("bit_identity", "telescoping", "oracle_equality"))
+    assert stats["n_probes"] > 0

@@ -1,0 +1,178 @@
+"""Full registry probe coverage: every ``registry.list_archs()`` smoke
+config runs through a probed ``build_train_step`` AND a probed serve
+``decode_step``, and both decoded records are golden-locked against
+``tests/golden/arch_<slug>.json`` (tools/regen_golden.py).
+
+This closes the gap where only tinyllama's forward pass had a pinned
+record: MoE dispatch, SSM scans, shared-attention interleaving, mrope
+and the audio/vision frontends each shape the probe tree differently,
+so each arch gets its own canonical record. Records depend on the
+traced jaxpr and therefore the jax version; like test_golden.py the
+comparison skips off the CI pin (the nightly pinned matrix keeps it
+exercised).
+
+Also home to the registry structural invariants (satellite coverage for
+``all_cells()`` / ``supported_shapes()`` skip logic and the smoke_config
+branch rules for moe / ssm / mrope archs).
+"""
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.registry import smoke_config
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+import regen_golden  # noqa: E402
+
+ARCHS = registry.list_archs()
+
+# two structurally distinct archs stay in the fast tier (one ssm, one
+# moe); the rest of the registry runs with the slow suite
+FAST_ARCHS = ("mamba2-370m", "granite-moe-1b-a400m")
+
+
+def _arch_params(arch):
+    return [pytest.param(a) if a in FAST_ARCHS
+            else pytest.param(a, marks=pytest.mark.slow) for a in arch]
+
+
+def _load_arch(arch):
+    path = regen_golden.golden_path(regen_golden.arch_slug(arch))
+    if not os.path.exists(path):
+        pytest.fail(f"missing golden record {path} — run "
+                    f"PYTHONPATH=src python tools/regen_golden.py")
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("arch", _arch_params(ARCHS))
+def test_arch_probed_records_match_golden(arch):
+    golden = _load_arch(arch)
+    if golden["jax"] != jax.__version__:
+        pytest.skip(f"golden for jax {golden['jax']}, running "
+                    f"{jax.__version__} — regenerate under the pin")
+    got = json.loads(regen_golden.encode(regen_golden.run_arch_case(arch)))
+    assert got == golden, (
+        f"probed record for {arch!r} drifted — inspect with "
+        f"`python tools/regen_golden.py --diff --case "
+        f"{regen_golden.arch_slug(arch)}`")
+
+
+def test_every_arch_has_a_committed_golden():
+    """The acceptance bar: one golden file per registry arch, each with
+    BOTH a train and a serve record and a nonempty probe set."""
+    for arch in ARCHS:
+        golden = _load_arch(arch)
+        assert golden["arch"] == arch
+        for phase in ("train", "serve"):
+            assert golden[phase]["paths"], (arch, phase)
+            rec = golden[phase]["record"]
+            assert rec["cycle"] > 0, (arch, phase)
+            assert sum(rec["calls"]) > 0, (arch, phase)
+
+
+def test_probed_decode_is_bit_identical_unprobed():
+    """Serve-path non-intrusiveness (never covered before): the probed
+    decode step returns logits/cache/token bit-identical to plain jit —
+    exercised on the audio-frontend arch, whose embeds input path is the
+    one no other probe test touches."""
+    from repro.configs.base import ShapeConfig
+    from repro.core import ProbeConfig, probe
+    from repro.models import Model
+    from repro.models.frontends import synth_frontend_batch
+
+    cfg = smoke_config("musicgen-large")
+    m = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init(key)
+    B = 2
+    cache = m.init_cache(ShapeConfig("t", seq_len=64, global_batch=B,
+                                     kind="decode"))
+    fb = synth_frontend_batch(cfg, B, 1, jnp.bfloat16, key)
+    batch = {"embeds": fb["embeds"], "pos": jnp.int32(3)}
+    pf = probe(m.decode_step, ProbeConfig(max_probes=24))
+    (logits, cache2, nxt), rec = pf(params, cache, batch)
+    logits0, cache20, nxt0 = jax.jit(m.decode_step)(params, cache, batch)
+    assert np.array_equal(np.asarray(logits), np.asarray(logits0))
+    assert np.array_equal(np.asarray(nxt), np.asarray(nxt0))
+    for a, b in zip(jax.tree_util.tree_leaves(cache2),
+                    jax.tree_util.tree_leaves(cache20)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------ registry structural rules
+
+def test_all_cells_skip_logic():
+    """``all_cells`` marks exactly the long_500k cells of non-long-
+    context archs as skipped, and nothing else."""
+    cells = registry.all_cells()
+    assert len(cells) == len(ARCHS) * len(registry.SHAPES)
+    for arch, shape, skip in cells:
+        cfg = registry.get_config(arch)
+        assert skip == (shape == "long_500k"
+                        and not cfg.supports_long_context), (arch, shape)
+
+
+def test_supported_shapes_matches_cells():
+    """``supported_shapes`` is exactly the non-skipped rows of
+    ``all_cells`` for each arch, in the global shape order."""
+    shape_order = list(registry.SHAPES)
+    for arch in ARCHS:
+        cfg = registry.get_config(arch)
+        names = [s.name for s in registry.supported_shapes(cfg)]
+        want = [shape for a, shape, skip in registry.all_cells()
+                if a == arch and not skip]
+        assert names == want, arch
+        assert names == [n for n in shape_order if n in names]
+        assert ("long_500k" in names) == cfg.supports_long_context
+
+
+def test_smoke_config_structural_invariants():
+    """The smoke reduction must preserve each arch's structural family:
+    the moe / ssm / mrope / shared-attention branches all stay active
+    (otherwise registry probe coverage silently tests plain dense
+    transformers ten times)."""
+    for arch in ARCHS:
+        full = registry.get_config(arch)
+        cfg = smoke_config(arch)
+        assert cfg.num_layers == 2 and cfg.d_model == 64, arch
+        assert cfg.vocab_size == 257, arch          # odd: uneven shards
+        assert (cfg.moe is None) == (full.moe is None), arch
+        assert (cfg.ssm is None) == (full.ssm is None), arch
+        assert cfg.frontend == full.frontend, arch
+        if full.moe is not None:
+            assert cfg.moe.num_experts == 4, arch
+            assert cfg.moe.top_k <= 2, arch
+            assert cfg.moe.dense_residual == full.moe.dense_residual
+            assert (cfg.moe.residual_d_ff > 0) == full.moe.dense_residual
+        if full.ssm is not None:
+            assert cfg.ssm.d_state == 16, arch
+            assert cfg.ssm.head_dim == 8, arch
+            assert cfg.ssm.chunk_size == 16, arch
+        if full.pos_emb == "mrope":
+            assert cfg.mrope_sections == (2, 3, 3), arch
+            assert sum(cfg.mrope_sections) == cfg.head_dim // 2, arch
+        if full.shared_attn_every:
+            assert cfg.shared_attn_every == 1, arch
+        if full.num_heads:
+            assert cfg.num_heads == 4, arch
+            assert 1 <= cfg.num_kv_heads <= 4, arch
+
+
+def test_smoke_registry_covers_families():
+    """The registry itself must span the families the conformance sweep
+    models: moe, ssm, frontend and mrope archs all present."""
+    cfgs = {a: registry.get_config(a) for a in ARCHS}
+    assert any(c.moe is not None for c in cfgs.values())
+    assert any(c.ssm is not None for c in cfgs.values())
+    assert any(c.frontend == "vision" for c in cfgs.values())
+    assert any(c.frontend == "audio" for c in cfgs.values())
+    assert any(c.pos_emb == "mrope" for c in cfgs.values())

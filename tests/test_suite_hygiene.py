@@ -24,6 +24,16 @@ SLOW_TESTS = {
                        "test_training_resume_continues",
                        "test_probed_production_train_step",
                        "test_dryrun_cell_machinery_smoke"),
+    "test_conformance_sweep.py": (
+        "test_discovering_spec_seed5_full_conformance",),
+}
+
+# corpus/registry parametrizations where only a fast head stays in the
+# tier-1 subset: the decorator block must route the tail through
+# pytest.param(..., marks=pytest.mark.slow)
+SLOW_PARAM_TESTS = {
+    "test_conformance_sweep.py": ("test_corpus_graph_conformance",),
+    "test_registry_probes.py": ("test_arch_probed_records_match_golden",),
 }
 
 
@@ -62,6 +72,18 @@ def test_exhaustive_sweeps_are_slow_marked():
         for name in names:
             assert "pytest.mark.slow" in _decorator_block(src, name), \
                 f"{mod}: {name} must be @pytest.mark.slow"
+
+
+def test_partially_slow_parametrizations_route_tail_to_slow():
+    """Corpus-style parametrizations keep a small fast head; the rest of
+    the id range must flow through pytest.param(..., marks=slow)."""
+    for mod, names in SLOW_PARAM_TESTS.items():
+        src = _read(mod)
+        assert "marks=pytest.mark.slow" in src, \
+            f"{mod}: no slow-routed parametrize tail"
+        for name in names:
+            assert "parametrize" in _decorator_block(src, name), \
+                f"{mod}: {name} must be parametrized"
 
 
 def test_fast_job_keeps_hard_timeout_and_slow_filter():

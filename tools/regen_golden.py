@@ -110,22 +110,89 @@ CASES: Dict[str, Callable[[], Tuple[Callable, tuple, Any]]] = {
 }
 
 
+# ------------------------------------------- per-arch registry cases
+
+def arch_slug(arch: str) -> str:
+    """Golden filename stem for one registry architecture."""
+    return "arch_" + arch.replace("-", "_").replace(".", "_")
+
+
+def list_arch_cases() -> Dict[str, str]:
+    """slug -> registry arch name, for every ``registry.list_archs()``
+    entry (each gets one golden file holding a probed train step record
+    AND a probed serve decode record)."""
+    from repro.configs import registry
+    return {arch_slug(a): a for a in registry.list_archs()}
+
+
+def _arch_train(arch: str):
+    """Probed ``build_train_step`` over the arch's smoke config —
+    deterministic params/opt/batch, same idiom as the system tests."""
+    import jax
+    from repro.configs.base import TrainConfig
+    from repro.configs.registry import smoke_config
+    from repro.core import ProbeConfig
+    from repro.distributed.steps import build_train_step
+    from repro.models import Model
+    from repro.optim import adamw
+
+    import jax.numpy as jnp
+
+    cfg = smoke_config(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.init(params, cfg.moment_dtype)
+    B, S = 2, 32
+    k = jax.random.PRNGKey(0)
+    if cfg.frontend != "none":
+        from repro.models.frontends import synth_frontend_batch
+        batch = dict(synth_frontend_batch(cfg, B, S, jnp.bfloat16, k))
+    else:
+        batch = {"tokens": jax.random.randint(k, (B, S), 0,
+                                              cfg.vocab_size)}
+    batch["labels"] = jax.random.randint(jax.random.fold_in(k, 1),
+                                         (B, S), 0, cfg.vocab_size)
+    step = build_train_step(model, TrainConfig(total_steps=10,
+                                               warmup_steps=1))
+    return step, (params, opt, batch), ProbeConfig(max_probes=24)
+
+
+def _arch_serve(arch: str):
+    """Probed single-token ``decode_step`` against a fresh cache."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.base import ShapeConfig
+    from repro.configs.registry import smoke_config
+    from repro.core import ProbeConfig
+    from repro.models import Model
+
+    cfg = smoke_config(arch)
+    m = Model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init(key)
+    B = 2
+    shape = ShapeConfig("t", seq_len=64, global_batch=B, kind="decode")
+    cache = m.init_cache(shape)
+    if cfg.frontend != "none":
+        from repro.models.frontends import synth_frontend_batch
+        fb = synth_frontend_batch(cfg, B, 1, jnp.bfloat16, key)
+        batch = {"embeds": fb["embeds"], "pos": jnp.int32(3)}
+    else:
+        batch = {"tokens": jnp.zeros((B, 1), jnp.int32),
+                 "pos": jnp.int32(3)}
+    return m.decode_step, (params, cache, batch), \
+        ProbeConfig(max_probes=24)
+
+
 # ------------------------------------------------- canonical encoding
 
-def run_case(name: str) -> Dict[str, Any]:
-    """Execute one case with a FRESH ProbedFunction and return its
-    canonical golden document (plain JSON types, key-sorted on dump)."""
+def _record_doc(pf, rec) -> Dict[str, Any]:
+    """Canonical decoded-record sub-document for one probe run."""
     import jax
-    from repro.core import probe
     from repro.core.instrument import decode_record
 
-    fn, args, cfg = CASES[name]()
-    pf = probe(fn, cfg)
-    _, rec = pf(*args)
     dec = decode_record(jax.device_get(rec))
     return {
-        "case": name,
-        "jax": jax.__version__,
         "paths": list(pf.probe_paths()),
         "record": {
             "cycle": int(dec["cycle"]),
@@ -142,6 +209,36 @@ def run_case(name: str) -> Dict[str, Any]:
     }
 
 
+def run_case(name: str) -> Dict[str, Any]:
+    """Execute one case with a FRESH ProbedFunction and return its
+    canonical golden document (plain JSON types, key-sorted on dump)."""
+    import jax
+    from repro.core import probe
+
+    arch_cases = list_arch_cases()
+    if name in arch_cases:
+        return run_arch_case(arch_cases[name])
+    fn, args, cfg = CASES[name]()
+    pf = probe(fn, cfg)
+    _, rec = pf(*args)
+    return {"case": name, "jax": jax.__version__, **_record_doc(pf, rec)}
+
+
+def run_arch_case(arch: str) -> Dict[str, Any]:
+    """One registry arch: probed train-step + serve-decode records."""
+    import jax
+    from repro.core import probe
+
+    doc: Dict[str, Any] = {"case": arch_slug(arch), "arch": arch,
+                           "jax": jax.__version__}
+    for phase, builder in (("train", _arch_train), ("serve", _arch_serve)):
+        fn, args, cfg = builder(arch)
+        pf = probe(fn, cfg)
+        _, rec = pf(*args)
+        doc[phase] = _record_doc(pf, rec)
+    return doc
+
+
 def encode(doc: Dict[str, Any]) -> str:
     return json.dumps(doc, sort_keys=True, indent=1) + "\n"
 
@@ -151,14 +248,15 @@ def golden_path(name: str) -> str:
 
 
 def main(argv=None) -> int:
+    all_names = sorted(CASES) + sorted(list_arch_cases())
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--case", choices=sorted(CASES), default=None,
+    ap.add_argument("--case", choices=all_names, default=None,
                     help="regenerate one case (default: all)")
     ap.add_argument("--diff", action="store_true",
                     help="preview the diff against the committed records "
                          "without writing anything")
     args = ap.parse_args(argv)
-    names = [args.case] if args.case else sorted(CASES)
+    names = [args.case] if args.case else all_names
     os.makedirs(GOLDEN_DIR, exist_ok=True)
     changed = 0
     for name in names:
