@@ -35,9 +35,10 @@ LOWER_BETTER = (
     "cycles", "span", "state_B", "state_bytes", "dram_B", "extra_eqns",
     "probe_ops", "probe_bytes", "measurements", "probed_steps",
     "mean_cycles", "skew", "wire_B", "err", "sub_walks",
+    "retraces", "pages_peak",
 )
 HIGHER_BETTER = ("speedup_x1000", "saving", "exact", "cache_hits",
-                 "reduction_x1000", "graphs", "invariants")
+                 "reduction_x1000", "graphs", "invariants", "hit_x1000")
 
 _NUM = re.compile(r"^(-?\d+(?:\.\d+)?)(?:[%x]?)$")
 

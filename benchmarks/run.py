@@ -44,7 +44,7 @@ def main() -> None:
 
     from benchmarks import (bench_accuracy, bench_conformance,
                             bench_discrepancy, bench_distributed,
-                            bench_dse, bench_incremental,
+                            bench_dse, bench_engine, bench_incremental,
                             bench_instrument, bench_latency_impact,
                             bench_offload, bench_overhead, bench_roofline,
                             bench_streaming, common)
@@ -59,6 +59,7 @@ def main() -> None:
         ("Fig 13    (DSE Pareto + kernel autotune)", bench_dse),
         ("Fig 1/14 + Table IV (discrepancies)", bench_discrepancy),
         ("Streaming (ProbeSession per-step overhead)", bench_streaming),
+        ("Engine    (paged continuous-batching serving)", bench_engine),
         ("Distributed (mesh probe: skew vs mesh size)", bench_distributed),
         ("Roofline  (dry-run derived)", bench_roofline),
     ]

@@ -123,6 +123,17 @@ def state_totals(state: Dict[str, Any]) -> np.ndarray:
     return np.atleast_1d(c64_to_int(arr))
 
 
+def state_clock(state: Dict[str, Any]) -> int:
+    """Current model-clock value (int) straight from a raw state, either
+    layout — the cheap read the serving engine polls between phase steps
+    to attribute per-request cycle deltas."""
+    if "cyc_hi" in state:
+        return int((np.asarray(state["cyc_hi"]).astype(np.uint64)
+                    << np.uint64(32))
+                   | np.asarray(state["cyc_lo"]).astype(np.uint64))
+    return int(c64_to_int(np.asarray(state["cycle"])))
+
+
 def decode_record(record: Dict[str, Any]) -> Dict[str, Any]:
     """Host-side view of a ProbeState / device record (either layout).
 

@@ -476,3 +476,50 @@ def bump_chart(rankings: Dict[str, List[str]], width: int = 18) -> str:
             cells.append(f"#{rank + 1} {v[rank] if rank < len(v) else '':<{width - 3}}")
         lines.append("  ".join(cells))
     return "\n".join(lines)
+
+
+# ------------------------------------------------- serving engine views
+
+def engine_phase_table(phase_totals: Dict[str, Dict[str, int]]) -> str:
+    """Per-phase cycle attribution for a serving-engine run.
+
+    ``phase_totals``: phase name -> {"cycles": total model-clock cycles,
+    "steps": step-function invocations} as produced by
+    ``repro.engine.InferenceEngine.stats()``. Shows where the engine's
+    device time goes: prompt prefill vs token decode vs paged-cache
+    management (page scatter).
+    """
+    total = sum(v.get("cycles", 0) for v in phase_totals.values())
+    lines = [f"{'phase':<16}{'steps':>8}{'cycles':>14}{'%':>7}"
+             f"{'cycles/step':>13}"]
+    for phase, v in phase_totals.items():
+        cyc, steps = v.get("cycles", 0), v.get("steps", 0)
+        pct = 100.0 * cyc / total if total else 0.0
+        per = cyc / steps if steps else 0.0
+        lines.append(f"{phase:<16}{steps:>8}{cyc:>14}{pct:>6.1f}%"
+                     f"{per:>13.1f}")
+    lines.append(f"{'total':<16}{'':>8}{total:>14}{100.0 if total else 0.0:>6.1f}%")
+    return "\n".join(lines)
+
+
+def engine_request_table(requests) -> str:
+    """Per-request phase attribution rows for finished engine requests.
+
+    Each request carries exact integer cycle deltas per phase (prefill
+    and cache-scatter run exclusively at batch 1; decode cycles are the
+    shared batched-step totals the request participated in, shown with
+    the mean batch size so a fair per-request share can be read off).
+    """
+    lines = [f"{'req':>5}{'prompt':>8}{'new':>6}{'prefill':>12}"
+             f"{'cache':>10}{'decode(shared)':>16}{'avg B':>7}"
+             f"{'shared pages':>14}"]
+    for r in requests:
+        nd = len(r.decode_batches)
+        avg_b = sum(r.decode_batches) / nd if nd else 0.0
+        lines.append(
+            f"{r.rid:>5}{len(r.prompt):>8}{len(r.out_tokens):>6}"
+            f"{r.phase_cycles.get('prefill', 0):>12}"
+            f"{r.phase_cycles.get('cache', 0):>10}"
+            f"{r.phase_cycles.get('decode', 0):>16}{avg_b:>7.2f}"
+            f"{r.shared_pages:>14}")
+    return "\n".join(lines)

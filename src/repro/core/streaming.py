@@ -417,6 +417,18 @@ class ProbeSession:
         from repro.core.instrument import state_totals
         return state_totals(self._state)
 
+    def clock(self) -> int:
+        """Current device model-clock value (cycles since the session's
+        first step; 0 before any step). Reading it between steps costs
+        one scalar device_get — the serving engine's per-request phase
+        attribution takes clock deltas around each step call."""
+        if self._state is None:
+            return 0
+        from repro.core.instrument import state_clock
+        return state_clock(jax.device_get(
+            {k: self._state[k] for k in ("cyc_hi", "cyc_lo")
+             if k in self._state} or self._state))
+
     def _maybe_roll_window(self):
         """Close the current time window once it is full. The window
         delta telescopes to (totals now - totals at window start), so

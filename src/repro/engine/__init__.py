@@ -1,0 +1,20 @@
+"""Probe-attributed continuous-batching serving engine.
+
+Serving counterpart of the one-shot probe machinery: a paged-KV
+continuous-batching scheduler whose prefill / cache-management / decode
+phases each run under the streaming cycle probes, bucketed so that no
+request mix ever triggers a retrace. See docs/serving.md.
+"""
+from repro.engine.engine import (EngineConfig, InferenceEngine, PHASES,
+                                 Request)
+from repro.engine.pagetable import (NULL_PAGE, PagePoolExhausted, PageTable,
+                                    PrefixTree)
+from repro.engine.step import (build_engine_prefill, build_page_scatter,
+                               build_paged_decode, engine_compatible)
+
+__all__ = [
+    "EngineConfig", "InferenceEngine", "PHASES", "Request",
+    "NULL_PAGE", "PagePoolExhausted", "PageTable", "PrefixTree",
+    "build_engine_prefill", "build_page_scatter", "build_paged_decode",
+    "engine_compatible",
+]

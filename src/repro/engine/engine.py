@@ -1,0 +1,383 @@
+"""Probe-attributed continuous-batching inference engine.
+
+The serving analogue of the paper's always-on in-fabric profiler: a
+request scheduler whose every phase — prefill, KV-cache management,
+batched decode — runs under the same cycle-probe machinery as the rest
+of the repo, so each request leaves with a per-phase cycle bill.
+
+Scheduling model (all host-side; device work is the pre-traced steps
+from :mod:`repro.engine.step`):
+
+- **FCFS admission.** Requests wait in arrival order; the head of the
+  queue is admitted as soon as its pages fit and a decode slot is open.
+  Later requests never jump the head, so no request starves.
+- **All pages up front.** Admission allocates every page the request
+  will ever touch (prompt + ``max_new`` growth), so decode can never
+  fail mid-request. Full prompt pages found in the prefix tree are
+  shared by refcount instead of allocated.
+- **Bucketed batching, zero retraces.** Decode runs at the smallest
+  configured batch bucket covering the runnable set; padded lanes point
+  at the null page. Each (phase, shape) step is traced exactly once —
+  ``retraces()`` counts compile-cache growth beyond that and the test
+  suite asserts it stays 0.
+- **Per-phase attribution.** With ``probe=True`` each step family runs
+  inside a :class:`~repro.core.streaming.ProbeSession`; the engine takes
+  device model-clock deltas around every call. Prefill and cache cycles
+  are exclusive to one request; a decode delta is shared by its batch
+  (each rider logs the bucket width in ``decode_batches``).
+
+Outputs are bit-identical to the unbatched reference serving path
+(asserted in tests/test_engine.py) — batching, paging, padding, and
+prefix sharing are all exact-arithmetic-preserving transformations.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine.pagetable import (NULL_PAGE, PagePoolExhausted, PageTable,
+                                    PrefixTree)
+from repro.engine.step import (build_engine_prefill, build_page_scatter,
+                               build_paged_decode, engine_compatible)
+
+PHASES = ("prefill", "cache", "decode")
+
+
+@dataclass
+class Request:
+    """One serving request and its lifetime accounting."""
+    rid: int
+    prompt: List[int]
+    max_new: int
+    out_tokens: List[int] = field(default_factory=list)
+    phase_cycles: Dict[str, int] = field(
+        default_factory=lambda: {p: 0 for p in PHASES})
+    decode_batches: List[int] = field(default_factory=list)
+    shared_pages: int = 0
+    # scheduler-internal
+    pages: List[int] = field(default_factory=list)
+    pos: int = -1                     # last cache position written
+    last_tok: int = -1
+    done: bool = False
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Engine shape/bucket/probe knobs (all trace-shape determining)."""
+    page_size: int = 16
+    pool_pages: int = 64              # device pool size incl. null page
+    max_pages: int = 8                # page-table width per request
+    buckets: Tuple[int, ...] = (1, 2, 4)
+    use_kernel: bool = False          # paged_attention Pallas kernel
+    pages_per_step: int = 1           # kernel pipelining depth (DSE axis)
+    probe: bool = False
+    probe_targets: Tuple[str, ...] = ("",)
+    probe_max_probes: int = 16
+    prefix_cache: bool = True
+    interpret: Optional[bool] = None
+
+
+class InferenceEngine:
+    """Continuous-batching engine over one model + parameter set.
+
+    Usage::
+
+        eng = InferenceEngine(model, params, EngineConfig(probe=True))
+        eng.submit([1, 2, 3], max_new=8)
+        done = eng.run()          # list of finished Requests, rid order
+        print(eng.phase_table()); print(eng.request_table(done))
+        eng.drain()               # release prefix-cache pages
+    """
+
+    def __init__(self, model, params, config: EngineConfig = EngineConfig()):
+        cfg = model.cfg
+        if not engine_compatible(cfg):
+            raise ValueError(
+                f"engine requires an attention-family token model; got "
+                f"family={cfg.family!r} frontend={cfg.frontend!r}")
+        if tuple(sorted(config.buckets)) != tuple(config.buckets) \
+                or not config.buckets:
+            raise ValueError(f"buckets must be sorted non-empty, "
+                             f"got {config.buckets}")
+        if config.max_pages > config.pool_pages - 1:
+            raise ValueError(f"max_pages {config.max_pages} exceeds pool "
+                             f"capacity {config.pool_pages - 1}")
+        if config.use_kernel and config.max_pages % config.pages_per_step:
+            raise ValueError(f"max_pages {config.max_pages} not divisible "
+                             f"by pages_per_step {config.pages_per_step}")
+        self.model, self.params, self.config = model, params, config
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        shape = (cfg.num_layers, config.pool_pages, config.page_size, kv, hd)
+        kvd = jnp.dtype(cfg.kv_cache_dtype)
+        self.pool_k = jnp.zeros(shape, kvd)
+        self.pool_v = jnp.zeros(shape, kvd)
+        self.table = PageTable(config.pool_pages, config.page_size)
+        self.tree: Optional[PrefixTree] = \
+            PrefixTree(self.table) if config.prefix_cache else None
+        self._steps: Dict[Tuple[str, int], Any] = {}
+        self._waiting: deque = deque()
+        self._active: List[Request] = []
+        self._finished: List[Request] = []
+        self._next_rid = 0
+        self.phase_stats: Dict[str, Dict[str, int]] = {
+            p: {"steps": 0, "cycles": 0} for p in PHASES}
+        self.bucket_hist: Dict[int, int] = {}
+
+    # -- step registry ---------------------------------------------------
+    def _build(self, phase: str, size: int):
+        c = self.config
+        if phase == "prefill":
+            fn = build_engine_prefill(self.model, size, c.page_size)
+        elif phase == "cache":
+            fn = build_page_scatter(size)
+        else:
+            fn = build_paged_decode(
+                self.model, size, c.max_pages, c.page_size,
+                use_kernel=c.use_kernel, pages_per_step=c.pages_per_step,
+                interpret=c.interpret)
+        if c.probe:
+            from repro.core import ProbeConfig, ProbeSession
+            return ProbeSession(fn, ProbeConfig(
+                targets=c.probe_targets, offload=1.0,
+                max_probes=c.probe_max_probes))
+        return jax.jit(fn)
+
+    def _entry(self, phase: str, size: int):
+        entry = self._steps.get((phase, size))
+        if entry is None:
+            entry = self._steps[(phase, size)] = self._build(phase, size)
+        return entry
+
+    def _invoke(self, entry, *args):
+        return entry.step(*args) if self.config.probe else entry(*args)
+
+    def warmup(self):
+        """Trace + compile every (phase, shape) step ahead of serving.
+
+        Outputs are discarded (the pool is never assigned), so warmup
+        leaves serving state untouched — it only fills the compile
+        caches, making wave-over-wave host memory flat (soak test)."""
+        c, ps = self.config, self.config.page_size
+        for pp in range(1, c.max_pages + 1):
+            _, k, v = self._invoke(
+                self._entry("prefill", pp), self.params,
+                {"tokens": jnp.zeros((1, pp * ps), jnp.int32),
+                 "last_idx": jnp.zeros((1,), jnp.int32)})
+            self._invoke(self._entry("cache", pp), self.pool_k,
+                         self.pool_v, k, v, jnp.zeros((pp,), jnp.int32))
+        for b in c.buckets:
+            self._invoke(
+                self._entry("decode", b), self.params, self.pool_k,
+                self.pool_v,
+                {"tokens": jnp.zeros((b, 1), jnp.int32),
+                 "pos": jnp.zeros((b,), jnp.int32),
+                 "pages": jnp.zeros((b, c.max_pages), jnp.int32)})
+
+    def _step(self, phase: str, size: int, *args):
+        """Run one step, return (outputs, model-clock cycle delta)."""
+        entry = self._entry(phase, size)
+        if self.config.probe:
+            c0 = entry.clock()
+            out = entry.step(*args)
+            delta = entry.clock() - c0
+        else:
+            out = entry(*args)
+            delta = 0
+        st = self.phase_stats[phase]
+        st["steps"] += 1
+        st["cycles"] += delta
+        return out, delta
+
+    def retraces(self) -> int:
+        """Compile-cache entries beyond the one trace each step owns."""
+        total = 0
+        for (_, _), entry in self._steps.items():
+            jf = entry.pf._jitted_stateful if self.config.probe else entry
+            if jf is not None and hasattr(jf, "_cache_size"):
+                total += max(0, jf._cache_size() - 1)
+        return total
+
+    # -- request lifecycle ----------------------------------------------
+    def _pages_needed(self, prompt_len: int, max_new: int) -> int:
+        # positions 0..prompt_len-1 (prefill) plus max_new-1 decode writes
+        return max(1, math.ceil((prompt_len + max_new - 1)
+                                / self.config.page_size))
+
+    def submit(self, prompt: Sequence[int], max_new: int = 8) -> int:
+        prompt = [int(t) for t in prompt]
+        if not prompt or max_new < 1:
+            raise ValueError("need a non-empty prompt and max_new >= 1")
+        if self._pages_needed(len(prompt), max_new) > self.config.max_pages:
+            raise ValueError(
+                f"request needs {self._pages_needed(len(prompt), max_new)} "
+                f"pages; page table holds {self.config.max_pages}")
+        r = Request(rid=self._next_rid, prompt=prompt, max_new=max_new)
+        self._next_rid += 1
+        self._waiting.append(r)
+        return r.rid
+
+    def _page_tokens(self, r: Request) -> List[Tuple[int, ...]]:
+        ps = self.config.page_size
+        return [tuple(r.prompt[i * ps:(i + 1) * ps])
+                for i in range(len(r.prompt) // ps)]
+
+    def _try_admit(self, r: Request) -> bool:
+        n_pages = self._pages_needed(len(r.prompt), r.max_new)
+        page_tokens = self._page_tokens(r)
+        n_shared = self.tree.lookup(page_tokens) if self.tree else 0
+        if n_pages - n_shared > self.table.free_pages:
+            # prefix-cache pages are the only reclaimable slack: evict
+            # when the pool alone is the blocker, else wait for drains
+            if self.tree is not None and self.tree.nodes \
+                    and not self._active:
+                self.tree.clear()
+                n_shared = 0
+            if n_pages - n_shared > self.table.free_pages:
+                return False
+        shared = self.tree.match(page_tokens) if self.tree else []
+        assert len(shared) == n_shared, (len(shared), n_shared)
+        fresh = self.table.alloc(n_pages - len(shared))
+        r.pages = shared + fresh
+        r.shared_pages = len(shared)
+        self._prefill(r, page_tokens)
+        return True
+
+    def _prefill(self, r: Request, page_tokens: List[Tuple[int, ...]]):
+        c = self.config
+        P = len(r.prompt)
+        pp = math.ceil(P / c.page_size)
+        toks = np.zeros((1, pp * c.page_size), np.int32)
+        toks[0, :P] = r.prompt
+        (logits, k, v), d = self._step(
+            "prefill", pp, self.params,
+            {"tokens": jnp.asarray(toks),
+             "last_idx": jnp.array([P - 1], jnp.int32)})
+        r.phase_cycles["prefill"] += d
+        ids = jnp.array(r.pages[:pp], jnp.int32)
+        (self.pool_k, self.pool_v), d = self._step(
+            "cache", pp, self.pool_k, self.pool_v, k, v, ids)
+        r.phase_cycles["cache"] += d
+        if self.tree is not None and page_tokens:
+            self.tree.insert(page_tokens, r.pages[:len(page_tokens)])
+        tok = int(jnp.argmax(logits, axis=-1)[0])
+        r.out_tokens.append(tok)
+        r.last_tok = tok
+        r.pos = P - 1
+        if len(r.out_tokens) >= r.max_new:
+            self._complete(r)
+        else:
+            self._active.append(r)
+
+    def _complete(self, r: Request):
+        for p in r.pages:
+            self.table.free(p)
+        r.pages = []
+        r.done = True
+        self._finished.append(r)
+
+    def _admit(self):
+        while self._waiting and len(self._active) < self.config.buckets[-1]:
+            if not self._try_admit(self._waiting[0]):
+                break                   # FCFS: the head blocks the line
+            self._waiting.popleft()
+
+    def _decode_round(self):
+        c = self.config
+        sel = self._active[:c.buckets[-1]]
+        bucket = next(b for b in c.buckets if b >= len(sel))
+        self.bucket_hist[bucket] = self.bucket_hist.get(bucket, 0) + 1
+        pages = np.zeros((bucket, c.max_pages), np.int32)
+        pos = np.zeros(bucket, np.int32)
+        toks = np.zeros((bucket, 1), np.int32)
+        for i, r in enumerate(sel):
+            pages[i, :len(r.pages)] = r.pages
+            pos[i] = r.pos + 1
+            toks[i, 0] = r.last_tok
+        (_, self.pool_k, self.pool_v, next_tok), d = self._step(
+            "decode", bucket, self.params, self.pool_k, self.pool_v,
+            {"tokens": jnp.asarray(toks), "pos": jnp.asarray(pos),
+             "pages": jnp.asarray(pages)})
+        next_tok = np.asarray(next_tok)
+        finished = []
+        for i, r in enumerate(sel):
+            r.pos += 1
+            tok = int(next_tok[i])
+            r.out_tokens.append(tok)
+            r.last_tok = tok
+            r.decode_batches.append(bucket)
+            r.phase_cycles["decode"] += d
+            if len(r.out_tokens) >= r.max_new:
+                finished.append(r)
+        for r in finished:
+            self._active.remove(r)
+            self._complete(r)
+
+    def run(self) -> List[Request]:
+        """Serve until every submitted request has finished; returns the
+        requests completed by this call, in submission order."""
+        start = len(self._finished)
+        while self._waiting or self._active:
+            self._admit()
+            if self._active:
+                self._decode_round()
+            elif self._waiting:          # head unadmittable w/ idle pool
+                r = self._waiting[0]
+                raise PagePoolExhausted(
+                    f"request {r.rid} needs "
+                    f"{self._pages_needed(len(r.prompt), r.max_new)} pages "
+                    f"with only {self.table.free_pages} free")
+        return sorted(self._finished[start:], key=lambda r: r.rid)
+
+    def reap(self) -> List[Request]:
+        """Pop every finished request. Long-lived servers call this per
+        wave so engine-held state stays constant-size (the soak test's
+        flat-memory assertion)."""
+        out, self._finished = self._finished, []
+        return out
+
+    # -- teardown / reporting -------------------------------------------
+    def drain(self):
+        """Release prefix-cache page references; after a completed run
+        the page table then balances (``table.balanced()``)."""
+        if self.tree is not None:
+            self.tree.clear()
+
+    def close(self):
+        """Close probe sessions (restores each step's original sink)."""
+        if self.config.probe:
+            for entry in self._steps.values():
+                entry.close()
+
+    def stats(self) -> Dict[str, Any]:
+        hits = self.tree.hits if self.tree else 0
+        misses = self.tree.misses if self.tree else 0
+        return {
+            "requests": len(self._finished),
+            "phases": {p: dict(v) for p, v in self.phase_stats.items()},
+            "retraces": self.retraces(),
+            "pages_peak": self.table.peak_used,
+            "prefix_hits": hits,
+            "prefix_misses": misses,
+            "prefix_hit_rate": hits / (hits + misses) if hits + misses
+            else 0.0,
+            "buckets": dict(self.bucket_hist),
+            "steps_traced": len(self._steps),
+        }
+
+    def phase_table(self) -> str:
+        from repro.core.report import engine_phase_table
+        return engine_phase_table(self.phase_stats)
+
+    def request_table(self, requests: List[Request]) -> str:
+        from repro.core.report import engine_request_table
+        return engine_request_table(requests)

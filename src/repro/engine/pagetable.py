@@ -1,0 +1,182 @@
+"""Paged KV-cache bookkeeping: refcounted page table + prefix tree.
+
+Host-side metadata for the device-resident page pool. The pool itself
+is a pair of ``(num_pages, page_size, kv_heads, head_dim)`` arrays held
+by the engine; this module only tracks which pages are free, how many
+requests reference each page, and which fully-written prompt pages can
+be shared between requests with a common prompt prefix.
+
+Page 0 is the **null page**: permanently reserved, never handed out.
+Padded rows of a decode bucket point their whole page-table row at it,
+so dummy lanes scatter their (identical, deterministic) writes into a
+page no real request ever reads.
+
+Sharing is storage-level deduplication: a prefix-tree node maps a
+*full page of prompt tokens* (reached through its parent chain, so the
+key is position-dependent) to the pool page holding its KV rows. With
+causal attention, identical token prefixes produce bit-identical KV
+rows regardless of what follows them, so a shared page read by request
+A equals what A's own prefill would have written — bit-identity of
+outputs is preserved (asserted in tests/test_engine.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+NULL_PAGE = 0
+
+
+class PagePoolExhausted(RuntimeError):
+    """Raised by ``alloc`` when the free list cannot cover a request."""
+
+
+class PageTable:
+    """Free list + per-page reference counts over a fixed pool.
+
+    Pages are shared by refcount: a page is returned to the free list
+    only when its last reference drops. ``peak_used`` tracks the
+    high-water occupancy (a bench-gated metric).
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError(f"num_pages {num_pages} < 2 (page 0 is "
+                             "reserved as the null page)")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self.refcount = [0] * num_pages
+        self.refcount[NULL_PAGE] = 1          # pinned forever
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self.peak_used = 0
+
+    # -- capacity --------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        """Pages currently referenced (excluding the null page)."""
+        return (self.num_pages - 1) - len(self._free)
+
+    # -- alloc / share / free -------------------------------------------
+    def alloc(self, n: int) -> List[int]:
+        """Take ``n`` fresh pages (refcount 1 each) off the free list."""
+        if n > len(self._free):
+            raise PagePoolExhausted(
+                f"need {n} pages, {len(self._free)} free")
+        out = [self._free.pop() for _ in range(n)]
+        for p in out:
+            assert self.refcount[p] == 0, p
+            self.refcount[p] = 1
+        self.peak_used = max(self.peak_used, self.used_pages)
+        return out
+
+    def share(self, page: int) -> int:
+        """Add a reference to an already-live page."""
+        if page == NULL_PAGE:
+            return page
+        if self.refcount[page] <= 0:
+            raise ValueError(f"share of dead page {page}")
+        self.refcount[page] += 1
+        return page
+
+    def free(self, page: int) -> None:
+        """Drop one reference; recycle the page when none remain."""
+        if page == NULL_PAGE:
+            return
+        if self.refcount[page] <= 0:
+            raise ValueError(f"double free of page {page}")
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            self._free.append(page)
+
+    def balanced(self) -> bool:
+        """True iff every non-null page is unreferenced and free —
+        the drain invariant the hypothesis suite asserts."""
+        live = [p for p in range(1, self.num_pages) if self.refcount[p]]
+        return not live and len(self._free) == self.num_pages - 1
+
+
+@dataclass
+class _Node:
+    page: int
+    children: Dict[Tuple[int, ...], "_Node"] = field(default_factory=dict)
+
+
+class PrefixTree:
+    """Trie over full prompt pages for cross-request KV reuse.
+
+    Each edge is labelled with one page's worth of tokens; each node
+    (except the root) owns a reference on the pool page holding that
+    edge's KV rows. ``match`` walks the longest shared prefix and takes
+    a reference per matched page for the caller; ``insert`` registers a
+    request's freshly-prefilled full pages for future requests.
+    ``clear`` drops every tree-held reference (used at engine drain, so
+    page refcounts balance to zero).
+    """
+
+    def __init__(self, table: PageTable):
+        self.table = table
+        self.root = _Node(NULL_PAGE)
+        self.hits = 0
+        self.misses = 0
+        self.nodes = 0
+
+    def lookup(self, page_tokens: List[Tuple[int, ...]]) -> int:
+        """Length of the longest shared prefix, in pages — no references
+        taken, no hit/miss accounting (admission capacity checks)."""
+        node = self.root
+        n = 0
+        for toks in page_tokens:
+            child = node.children.get(toks)
+            if child is None:
+                break
+            n += 1
+            node = child
+        return n
+
+    def match(self, page_tokens: List[Tuple[int, ...]]
+              ) -> List[int]:
+        """Longest-prefix match; returns shared pages (ref'd for the
+        caller) covering ``page_tokens[:len(result)]``."""
+        node = self.root
+        out: List[int] = []
+        for toks in page_tokens:
+            child = node.children.get(toks)
+            if child is None:
+                break
+            out.append(self.table.share(child.page))
+            node = child
+        self.hits += len(out)
+        self.misses += len(page_tokens) - len(out)
+        return out
+
+    def insert(self, page_tokens: List[Tuple[int, ...]],
+               pages: List[int]) -> int:
+        """Register full prompt pages along one root path; the tree
+        takes its own reference on each newly registered page. Returns
+        the number of new nodes."""
+        assert len(page_tokens) == len(pages)
+        node = self.root
+        added = 0
+        for toks, page in zip(page_tokens, pages):
+            child = node.children.get(toks)
+            if child is None:
+                child = _Node(self.table.share(page))
+                node.children[toks] = child
+                added += 1
+            node = child
+        self.nodes += added
+        return added
+
+    def clear(self) -> None:
+        """Release every tree-held page reference."""
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            self.table.free(n.page)
+            stack.extend(n.children.values())
+        self.root = _Node(NULL_PAGE)
+        self.nodes = 0

@@ -1,0 +1,118 @@
+"""Engine soak: waves of random requests with flat-memory assertions.
+
+The nightly CI runs this as ``python -m repro.engine.soak``: a long
+random request trace (mixed prompt lengths, decode budgets, and shared
+prefixes, in randomized arrival order) served wave after wave through
+one :class:`~repro.engine.InferenceEngine`. After every wave the driver
+asserts the steady-state invariants a long-lived server depends on:
+
+- zero retraces — every step shape was traced during wave 1 and the
+  compile caches never grow again;
+- page accounting balances — after ``drain()`` the table returns to
+  all-free (no leaked or double-freed pages);
+- flat host memory — Python-side traced allocations after the last
+  wave stay within a fixed slack of the first wave's high-water mark
+  (finished requests are ``reap()``-ed per wave, aggregates are
+  constant-size).
+"""
+from __future__ import annotations
+
+import argparse
+import tracemalloc
+from typing import List
+
+import numpy as np
+
+
+def _wave(rng: np.random.Generator, eng, n_requests: int,
+          vocab: int, prefixes: List[List[int]]) -> List[int]:
+    ps = eng.config.page_size
+    cap = eng.config.max_pages * ps
+    rids = []
+    for _ in range(n_requests):
+        prompt: List[int] = []
+        if rng.random() < 0.5:
+            prompt += prefixes[int(rng.integers(len(prefixes)))]
+        prompt += rng.integers(0, vocab,
+                               int(rng.integers(1, 2 * ps))).tolist()
+        max_new = int(rng.integers(1, ps))
+        if len(prompt) + max_new - 1 > cap:
+            prompt = prompt[:cap - max_new + 1 - ps]
+        rids.append(eng.submit(prompt, max_new))
+    return rids
+
+
+def soak(*, arch: str = "tinyllama-1.1b", waves: int = 3,
+         requests_per_wave: int = 8, seed: int = 0,
+         use_kernel: bool = False, probe: bool = False,
+         mem_slack_bytes: int = 512 * 1024, verbose: bool = True) -> dict:
+    import jax
+    from repro.configs.registry import smoke_config
+    from repro.engine import EngineConfig, InferenceEngine
+    from repro.models.model import Model
+
+    cfg = smoke_config(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    eng = InferenceEngine(model, params, EngineConfig(
+        page_size=16, pool_pages=48, max_pages=8, buckets=(1, 2, 4),
+        use_kernel=use_kernel, pages_per_step=2, probe=probe,
+        interpret=True))
+    rng = np.random.default_rng(seed)
+    # one full page each, so later waves hit the prefix cache
+    prefixes = [rng.integers(0, cfg.vocab_size, 16).tolist()
+                for _ in range(3)]
+
+    eng.warmup()                     # compile caches filled before wave 0
+    tracemalloc.start()
+    marks, served = [], 0
+    for w in range(waves):
+        rids = _wave(rng, eng, requests_per_wave, cfg.vocab_size, prefixes)
+        eng.run()
+        done = eng.reap()
+        assert sorted(r.rid for r in done) == sorted(rids), \
+            f"wave {w}: starved requests"
+        assert all(len(r.out_tokens) == r.max_new for r in done)
+        served += len(done)
+        st = eng.stats()
+        assert st["retraces"] == 0, f"wave {w}: retraced: {st}"
+        mem = tracemalloc.get_traced_memory()[0]
+        marks.append(mem)
+        if verbose:
+            print(f"wave {w}: {len(done)} served, "
+                  f"pages_peak={st['pages_peak']}, "
+                  f"hit_rate={st['prefix_hit_rate']:.2f}, "
+                  f"host_mem={mem / 1024:.0f}KiB", flush=True)
+    tracemalloc.stop()
+    eng.drain()
+    assert eng.table.balanced(), "page accounting out of balance at drain"
+    assert marks[-1] <= marks[0] + mem_slack_bytes, \
+        f"host memory grew {marks[-1] - marks[0]}B over " \
+        f"{waves} waves (> {mem_slack_bytes}B slack)"
+    eng.close()
+    out = {"served": served, "mem_first": marks[0], "mem_last": marks[-1],
+           **eng.stats()}
+    if verbose:
+        print(f"soak OK: {served} requests over {waves} waves, "
+              f"mem {marks[0]} -> {marks[-1]} bytes")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--waves", type=int, default=3)
+    ap.add_argument("--requests-per-wave", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kernel", action="store_true",
+                    help="decode through the paged_attention Pallas kernel")
+    ap.add_argument("--probe", action="store_true",
+                    help="run every phase under a ProbeSession")
+    args = ap.parse_args()
+    soak(arch=args.arch, waves=args.waves,
+         requests_per_wave=args.requests_per_wave, seed=args.seed,
+         use_kernel=args.kernel, probe=args.probe)
+
+
+if __name__ == "__main__":
+    main()

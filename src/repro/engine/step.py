@@ -1,0 +1,245 @@
+"""Pre-traced engine step builders: bucketed prefill / scatter / decode.
+
+Every step here is traced exactly once per (bucket, shape) at engine
+warmup — continuous batching then serves any request mix with zero
+retraces (asserted in tests/test_engine.py). Three step families:
+
+- **prefill** (one per prompt page-count bucket): batch-1 forward over
+  the page-aligned padded prompt. The KV rows written for real
+  positions are bit-identical to an unpadded prefill (causal attention
+  makes each row depend only on its prefix), and the returned logits
+  are gathered at the *real* last token, not the padded one.
+- **scatter** (one per page-count bucket): copies the prefill cache
+  into the shared page pool at the request's page-table entries — the
+  engine's cache-management phase, probed separately from model math.
+- **decode** (one per batch-size bucket): batched single-token step
+  over the paged pool. The attend math mirrors
+  ``models.attention.attn_decode`` operation-for-operation (same einsum
+  shapes, same global softmax, vector positions instead of a shared
+  scalar), optionally routed through the ``paged_attention`` Pallas
+  kernel — both paths bit-identical to the dense reference.
+
+Padded lanes of a decode bucket run token 0 at position 0 against the
+null page; every dummy lane writes identical values to the same slot,
+so the pool stays deterministic and no real page is touched.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_mod
+from repro.models import transformer as tfm
+from repro.models.attention import _project_qkv
+from repro.models.layers import mlp_apply, rmsnorm
+
+
+def engine_compatible(cfg) -> bool:
+    """Token-in/token-out attention stacks only: the paged KV layout
+    has no analogue for SSM/hybrid recurrent state or frontend embeds."""
+    return cfg.family not in ("ssm", "hybrid") and cfg.frontend == "none"
+
+
+def build_engine_prefill(model, n_pages: int, page_size: int) -> Callable:
+    """Batch-1 prefill over ``n_pages * page_size`` padded tokens.
+
+    fn(params, batch) with batch = {"tokens": (1, n_pages*page_size),
+    "last_idx": (1,)} -> (logits (1, V) at last_idx, k, v) where k/v are
+    (L, n_pages, page_size, kv_heads, head_dim) page-major cache blocks.
+    """
+    cfg = model.cfg
+    seq = n_pages * page_size
+
+    def prefill(params, batch):
+        p = model._compute_cast(params)
+        x = model._embed_in(p, batch)
+        B, S, _ = x.shape
+        assert S == seq, (S, seq)
+        positions = model._positions(batch, S, B)
+        x, cache = tfm.stack_prefill(p["stack"], x, positions, cfg, seq)
+        with jax.named_scope("last_logits"):
+            idx = batch["last_idx"][:, None, None].astype(jnp.int32)
+            last = jnp.take_along_axis(
+                x, idx.repeat(x.shape[-1], -1), axis=1)[:, 0]
+            logits = jnp.einsum(
+                "bd,dv->bv", last,
+                model._unembed_weight(p).astype(last.dtype),
+                preferred_element_type=jnp.float32)
+            logits = model._mask_pad(logits)
+        L = cache["k"].shape[0]
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        k = cache["k"].reshape(L, n_pages, page_size, kv, hd)
+        v = cache["v"].reshape(L, n_pages, page_size, kv, hd)
+        return logits, k, v
+
+    return prefill
+
+
+def build_page_scatter(n_pages: int) -> Callable:
+    """Cache-management step: write ``n_pages`` prefilled page blocks
+    into the pool at the request's page-table entries.
+
+    fn(pool_k, pool_v, k, v, page_ids (n_pages,)) -> (pool_k, pool_v).
+    Re-writing a prefix-shared page stores bit-identical values (same
+    token prefix -> same KV rows), so sharing never perturbs readers.
+    """
+
+    def scatter(pool_k, pool_v, k, v, page_ids):
+        with jax.named_scope("page_scatter"):
+            pool_k = pool_k.at[:, page_ids].set(k.astype(pool_k.dtype))
+            pool_v = pool_v.at[:, page_ids].set(v.astype(pool_v.dtype))
+        return pool_k, pool_v
+
+    return scatter
+
+
+def _paged_attn_xla(lp, x, kp, vp, pages, pos, cfg, s_max: int,
+                    page_size: int):
+    """Dense-gather paged attend: ``attn_decode`` with vector positions
+    and a page-table cache — operation-for-operation the same math."""
+    positions = pos[:, None]
+    q, k_new, v_new = _project_qkv(lp, x, cfg, positions)
+    B = x.shape[0]
+    H, Hp = cfg.num_heads, q.shape[2]
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if Hp != H:
+        q = q[:, :, :H]
+    qg = q.reshape(B, 1, kv, cfg.q_per_kv, hd)
+    with jax.named_scope("cache_update"):
+        pidx = jnp.take_along_axis(pages, (pos // page_size)[:, None],
+                                   axis=1)[:, 0]
+        slot = pos % page_size
+        kp = kp.at[pidx, slot].set(k_new[:, 0].astype(kp.dtype))
+        vp = vp.at[pidx, slot].set(v_new[:, 0].astype(vp.dtype))
+    with jax.named_scope("attend"):
+        scale = 1.0 / math.sqrt(hd)
+        kd = kp[pages].reshape(B, s_max, kv, hd)
+        vd = vp[pages].reshape(B, s_max, kv, hd)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.bfloat16),
+                       kd.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.arange(s_max)[None, :] <= pos[:, None]
+        s = jnp.where(mask[:, None, None, None, :], s, -jnp.inf)
+        m = s.max(axis=-1, keepdims=True)
+        pr = jnp.exp(s - m)
+        l = pr.sum(axis=-1, keepdims=True)
+        o = jnp.einsum("bkgqs,bskh->bkgqh", (pr / l).astype(jnp.bfloat16),
+                       vd.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+        o = o[:, :, :, 0]                               # (B, kv, g, hd)
+    return o, kp, vp
+
+
+def _paged_attn_kernel(lp, x, kp, vp, pages, pos, cfg, s_max: int,
+                       page_size: int, pages_per_step: int,
+                       interpret: bool):
+    """Pallas paged-attention attend (bit-identical to the XLA path)."""
+    from repro.kernels.paged_attention import paged_attention
+    positions = pos[:, None]
+    q, k_new, v_new = _project_qkv(lp, x, cfg, positions)
+    B = x.shape[0]
+    H, Hp = cfg.num_heads, q.shape[2]
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    if Hp != H:
+        q = q[:, :, :H]
+    qg = q.reshape(B, 1, kv, cfg.q_per_kv, hd)
+    with jax.named_scope("cache_update"):
+        pidx = jnp.take_along_axis(pages, (pos // page_size)[:, None],
+                                   axis=1)[:, 0]
+        slot = pos % page_size
+        kp = kp.at[pidx, slot].set(k_new[:, 0].astype(kp.dtype))
+        vp = vp.at[pidx, slot].set(v_new[:, 0].astype(vp.dtype))
+    o = paged_attention(qg[:, 0], kp, vp, pages, pos,
+                        pages_per_step=pages_per_step, interpret=interpret)
+    return o, kp, vp
+
+
+def build_paged_decode(model, batch_size: int, n_pages: int,
+                       page_size: int, *, use_kernel: bool = True,
+                       pages_per_step: int = 1,
+                       interpret: bool | None = None) -> Callable:
+    """Batched single-token decode over the paged pool.
+
+    fn(params, pool_k, pool_v, batch) with batch = {"tokens": (B, 1),
+    "pos": (B,), "pages": (B, n_pages)} ->
+    (logits (B, V), pool_k, pool_v, next_tokens (B,)).
+    """
+    cfg = model.cfg
+    s_max = n_pages * page_size
+    if interpret is None:
+        from repro.kernels.ops import _interpret_default
+        interpret = _interpret_default()
+
+    def attend(lp, x, kp, vp, pages, pos):
+        if use_kernel:
+            return _paged_attn_kernel(lp, x, kp, vp, pages, pos, cfg,
+                                      s_max, page_size, pages_per_step,
+                                      interpret)
+        return _paged_attn_xla(lp, x, kp, vp, pages, pos, cfg, s_max,
+                               page_size)
+
+    def decode(params, pool_k, pool_v, batch):
+        cd = jnp.dtype(cfg.compute_dtype)
+        p = model._compute_cast(params)
+        with jax.named_scope("embed"):
+            x = jnp.take(p["embed"], batch["tokens"], axis=0).astype(cd)
+        pos = batch["pos"]
+        pages = batch["pages"]
+
+        def body(carry, inp):
+            h, pk, pv = carry
+            lp, li = inp
+            with jax.named_scope("layer"):
+                kp = jax.lax.dynamic_index_in_dim(pk, li, 0,
+                                                  keepdims=False)
+                vp = jax.lax.dynamic_index_in_dim(pv, li, 0,
+                                                  keepdims=False)
+                with jax.named_scope("attn"):
+                    o, kp, vp = attend(
+                        lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps),
+                        kp, vp, pages, pos)
+                    with jax.named_scope("out_proj"):
+                        B = h.shape[0]
+                        H = cfg.num_heads
+                        hd = cfg.resolved_head_dim
+                        Hp = lp["attn"]["wo"].shape[0]
+                        ow = o[:, None].reshape(B, 1, H, hd).astype(h.dtype)
+                        if Hp != H:
+                            ow = jnp.pad(ow, [(0, 0), (0, 0),
+                                              (0, Hp - H), (0, 0)])
+                        a = jnp.einsum("bsnh,nhd->bsd", ow, lp["attn"]["wo"])
+                h = h + a
+                if cfg.moe is not None:
+                    with jax.named_scope("moe"):
+                        mo, _ = moe_mod.moe_apply(
+                            lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps),
+                            cfg)
+                else:
+                    with jax.named_scope("mlp"):
+                        mo = mlp_apply(lp["mlp"],
+                                       rmsnorm(h, lp["ln2"], cfg.norm_eps))
+                h = h + mo
+                pk = jax.lax.dynamic_update_index_in_dim(pk, kp, li, 0)
+                pv = jax.lax.dynamic_update_index_in_dim(pv, vp, li, 0)
+            return (h, pk, pv), None
+
+        stack = p["stack"]
+        with jax.named_scope("layers"):
+            (x, pool_k, pool_v), _ = jax.lax.scan(
+                body, (x, pool_k, pool_v),
+                (stack["layers"],
+                 jnp.arange(cfg.num_layers, dtype=jnp.int32)))
+        with jax.named_scope("final_norm"):
+            x = rmsnorm(x, stack["ln_f"], cfg.norm_eps)
+        with jax.named_scope("last_logits"):
+            logits = jnp.einsum("bd,dv->bv", x[:, -1],
+                                model._unembed_weight(p).astype(cd),
+                                preferred_element_type=jnp.float32)
+            logits = model._mask_pad(logits)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, pool_k, pool_v, next_tok
+
+    return decode

@@ -1,0 +1,158 @@
+"""Paged-attention decode kernel — Pallas TPU, bit-exact by construction.
+
+Single-token GQA decode over a paged KV cache: each sequence's cache
+lives in non-contiguous fixed-size pages of a shared pool, addressed
+through a per-request page table row. The page indices are **scalar
+prefetch** operands (``pltpu.PrefetchScalarGridSpec``), so the
+BlockSpec index maps chase the page table and the pipeline DMAs each
+page of the pool directly into VMEM — the dense (B, S_max) gather that
+the XLA fallback materializes in HBM never exists.
+
+Exactness contract (the serving engine's bit-identity guarantee rests
+on this): the kernel does NOT use streaming flash softmax. It stages
+the pages into a VMEM scratch shaped exactly like the dense gather and
+then runs the *same einsum shapes and the same global softmax* as the
+reference ``models.attention.attn_decode`` — equal-length reductions
+over equal values produce equal floats, so the output is bit-identical
+to the unpaged reference (asserted in tests/test_engine.py). Slots
+beyond ``pos`` contribute exact ``exp(-inf) = 0.0``, which also makes
+stale contents of reused pool pages harmless.
+
+RealProbe tie-in: the copy/attend phases sit under named scopes so
+``ProbeConfig(kernel_probes=...)`` attributes per-grid-step cycles to
+page staging vs attend math, and ``pages_per_step`` (pages DMA'd per
+grid step — the pipelining depth) is a DSE axis tuned by
+``kernels.search_spaces.paged_attention_space``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_PAGES_PER_STEP = 1
+
+_SEMANTICS = ("parallel", "arbitrary")
+
+
+def _compiler_params(interpret: bool):
+    if interpret:
+        return None
+    if hasattr(pltpu, "CompilerParams"):             # jax >= 0.7 style
+        return pltpu.CompilerParams(dimension_semantics=_SEMANTICS)
+    return dict(mosaic=dict(dimension_semantics=_SEMANTICS))
+
+
+def _paged_kernel(pages_ref, pos_ref, q_ref, *rest, pages_per_step: int,
+                  page_size: int, n_pages: int, sm_scale: float):
+    k_refs = rest[:pages_per_step]
+    v_refs = rest[pages_per_step:2 * pages_per_step]
+    o_ref = rest[2 * pages_per_step]
+    k_scr, v_scr = rest[2 * pages_per_step + 1:]
+    # NB: every program_id/num_programs read happens at the kernel's
+    # top level — inside a pl.when body they are not substituted by the
+    # interpret-mode evaluator (jax 0.4.x).
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    n_steps = pl.num_programs(1)
+    s_max = n_pages * page_size
+
+    with jax.named_scope("copy_pages"):
+        # one grid step stages `pages_per_step` pool pages into the
+        # dense VMEM scratch (statically unrolled DMA group)
+        for i in range(pages_per_step):
+            k_scr[j * pages_per_step + i] = k_refs[i][...]
+            v_scr[j * pages_per_step + i] = v_refs[i][...]
+
+    with jax.named_scope("attend"):
+        @pl.when(j == n_steps - 1)
+        def _attend():
+            # dense-shape global softmax: identical einsum shapes and
+            # reduction lengths as the XLA reference — not flash
+            kv, g, hd = q_ref.shape[1:]
+            qg = q_ref[...][:, None]                 # (1, 1, kv, g, hd)
+            kd = k_scr[...].reshape(1, s_max, kv, hd)
+            vd = v_scr[...].reshape(1, s_max, kv, hd)
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.bfloat16),
+                           kd.astype(jnp.bfloat16),
+                           preferred_element_type=jnp.float32) * sm_scale
+            mask = jnp.arange(s_max)[None, :] <= pos_ref[b][None, None]
+            s = jnp.where(mask[:, None, None, None, :], s, -jnp.inf)
+            m = s.max(axis=-1, keepdims=True)
+            p = jnp.exp(s - m)
+            l = p.sum(axis=-1, keepdims=True)
+            o = jnp.einsum("bkgqs,bskh->bkgqh", (p / l).astype(jnp.bfloat16),
+                           vd.astype(jnp.bfloat16),
+                           preferred_element_type=jnp.float32)
+            o_ref[...] = o[:, :, :, 0]
+
+
+def paged_attention(q, pool_k, pool_v, pages, pos, *,
+                    pages_per_step: int = DEFAULT_PAGES_PER_STEP,
+                    interpret: bool = False):
+    """Paged single-token GQA decode attention.
+
+    q:       (B, kv_heads, q_per_kv, head_dim) — current-token queries
+    pool_k:  (num_pool_pages, page_size, kv_heads, head_dim)
+    pool_v:  same shape as pool_k
+    pages:   (B, n_pages) int32 page-table rows into the pool
+    pos:     (B,) int32 current position (slots > pos are masked)
+
+    ``pages_per_step`` pages are fetched per grid step (the pool is
+    bound once per page slot, so page-table rows stay arbitrary — no
+    contiguity requirement on the allocator).
+
+    Returns (B, kv_heads, q_per_kv, head_dim) float32 — bit-identical
+    to the dense-gather reference over ``pool[pages]``.
+    """
+    B, kv, g, hd = q.shape
+    page_size = pool_k.shape[1]
+    n_pages = pages.shape[1]
+    if pages_per_step < 1 or n_pages % pages_per_step:
+        raise ValueError(f"pages_per_step {pages_per_step} must divide "
+                         f"page-table width {n_pages}")
+    n_steps = n_pages // pages_per_step
+    sm_scale = 1.0 / math.sqrt(hd)
+
+    def page_map(i):
+        def index_map(b, j, pages_ref, pos_ref):
+            del pos_ref
+            return (pages_ref[b, j * pages_per_step + i], 0, 0, 0)
+        return index_map
+
+    def q_map(b, j, pages_ref, pos_ref):
+        del pages_ref, pos_ref
+        return (b, 0, 0, 0)
+
+    page_block = (1, page_size, kv, hd)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, n_steps),
+        in_specs=(
+            [pl.BlockSpec((1, kv, g, hd), q_map)]
+            + [pl.BlockSpec(page_block, page_map(i))
+               for i in range(pages_per_step)]
+            + [pl.BlockSpec(page_block, page_map(i))
+               for i in range(pages_per_step)]
+        ),
+        out_specs=pl.BlockSpec((1, kv, g, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((n_pages, 1, page_size, kv, hd), pool_k.dtype),
+            pltpu.VMEM((n_pages, 1, page_size, kv, hd), pool_v.dtype),
+        ],
+    )
+    kernel = functools.partial(
+        _paged_kernel, pages_per_step=pages_per_step, page_size=page_size,
+        n_pages=n_pages, sm_scale=sm_scale)
+    pools = [pool_k] * pages_per_step + [pool_v] * pages_per_step
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, kv, g, hd), jnp.float32),
+        compiler_params=_compiler_params(interpret),
+        interpret=interpret,
+    )(pages, pos, q, *pools)

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_attention as _pa
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels.ops import _interpret_default as _interpret
 
@@ -97,7 +98,55 @@ def ssd_scan_space(*, B: int = 1, H: int = 4, G: int = 2, L: int = 256,
         is_valid=is_valid)
 
 
+def paged_attention_space(*, B: int = 4, KV: int = 4, G: int = 2,
+                          HD: int = 64, page_size: int = 16,
+                          n_pages: int = 8, pool_pages: int = 64,
+                          kv_dtype=jnp.bfloat16,
+                          pages_per_step: Tuple[int, ...] = (1, 2, 4, 8),
+                          seed: int = 0):
+    """Pipelining-depth space for the paged-attention decode kernel.
+
+    The workload is a randomly permuted page table (the serving
+    engine's steady state: pages are scattered by alloc/free churn),
+    with per-request positions spread across the cache range.
+    """
+    from repro.core.dse import SearchSpace
+    k0, k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(k0, (B, KV, G, HD), jnp.float32)
+    pool_k = jax.random.normal(
+        k1, (pool_pages, page_size, KV, HD)).astype(kv_dtype)
+    pool_v = jax.random.normal(
+        k2, (pool_pages, page_size, KV, HD)).astype(kv_dtype)
+    pages = jax.random.permutation(
+        k3, pool_pages)[:B * n_pages].reshape(B, n_pages).astype(jnp.int32)
+    s_max = page_size * n_pages
+    pos = (jnp.arange(B, dtype=jnp.int32) * (s_max // max(B, 1))
+           + page_size - 1) % s_max
+
+    def is_valid(cfg):
+        return n_pages % cfg["pages_per_step"] == 0
+
+    def bind(cfg):
+        pps = cfg["pages_per_step"]
+        interp = _interpret()
+
+        def fn(q, pool_k, pool_v, pages, pos):
+            with jax.named_scope("paged_attention"):
+                return _pa.paged_attention(q, pool_k, pool_v, pages, pos,
+                                           pages_per_step=pps,
+                                           interpret=interp)
+        return fn
+
+    return SearchSpace(
+        kernel_id="paged_attention",
+        axes={"pages_per_step": pages_per_step},
+        bind=bind, args=(q, pool_k, pool_v, pages, pos),
+        default={"pages_per_step": _pa.DEFAULT_PAGES_PER_STEP},
+        is_valid=is_valid)
+
+
 SPACES = {
     "flash_attention": flash_attention_space,
     "ssd_scan": ssd_scan_space,
+    "paged_attention": paged_attention_space,
 }

@@ -1,10 +1,15 @@
-"""Batched serving loop: prefill a batch of prompts, then decode tokens
-in lock step (the decode_32k / long_500k shapes lower exactly this step).
+"""Serving entry point, routed through the continuous-batching engine.
 
-``--profile`` runs the decode loop under a live ``ProbeSession``: the
-actual production step is cycle-profiled continuously (constant memory,
-outputs unchanged), with a live per-decode-step telemetry line and a
-final running table + window bump chart.
+Engine-compatible models (attention family, token inputs) serve through
+``repro.engine.InferenceEngine``: each batch row becomes one request,
+decode runs at a pre-traced batch bucket over the paged KV pool, and
+``--profile`` attributes model-clock cycles to prefill / cache / decode
+per request (docs/serving.md). Outputs are bit-identical to the legacy
+lock-step loop (asserted in tests/test_engine.py).
+
+The legacy loop remains for frontend/SSM/hybrid models and for
+``--mesh`` per-device probing, where ``--profile`` runs the decode step
+under a live ``ProbeSession`` with streaming telemetry.
 """
 from __future__ import annotations
 
@@ -48,13 +53,56 @@ def _mesh_decode_session(model, shape, mesh_shape, frontend: bool,
         window_steps=window_steps)
 
 
+def _engine_serve(model, params, key, *, batch: int, prompt_len: int,
+                  max_new: int, profile: bool,
+                  profile_targets: Tuple[str, ...],
+                  profile_max_probes: int, engine_kernel: bool):
+    """Serve ``batch`` random prompts through the continuous-batching
+    engine (one request per row, decode bucketed at the batch size)."""
+    import math
+
+    from repro.engine import EngineConfig, InferenceEngine
+    cfg = model.cfg
+    page = 16
+    max_pages = max(1, math.ceil((prompt_len + max_new - 1) / page))
+    eng = InferenceEngine(model, params, EngineConfig(
+        page_size=page, pool_pages=batch * max_pages + 2,
+        max_pages=max_pages,
+        buckets=(1, batch) if batch > 1 else (1,),
+        use_kernel=engine_kernel, probe=profile,
+        probe_targets=profile_targets,
+        probe_max_probes=profile_max_probes))
+    tokens = jax.random.randint(key, (batch, prompt_len), 0,
+                                cfg.vocab_size)
+    prompts = np.asarray(tokens)
+    t0 = time.time()
+    for b in range(batch):
+        eng.submit(prompts[b].tolist(), max_new)
+    done = eng.run()
+    t_serve = time.time() - t0
+    toks = np.array([r.out_tokens for r in done], np.int32)
+    st = eng.stats()
+    print(f"engine: {batch} requests x {max_new} tokens in "
+          f"{t_serve * 1e3:.1f} ms (pages peak {st['pages_peak']}, "
+          f"retraces {st['retraces']})")
+    if profile:
+        print("\n# per-phase cycle attribution")
+        print(eng.phase_table())
+        print("\n# per-request phase bill")
+        print(eng.request_table(done))
+    eng.drain()
+    eng.close()
+    return toks
+
+
 def serve(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
           batch: int = 4, prompt_len: int = 32, max_new: int = 16,
           cache_len: int = 128, profile: bool = False,
           profile_targets: Tuple[str, ...] = ("",),
           profile_every: int = 8, profile_max_probes: int = 16,
           profile_mesh: Tuple[int, ...] = (),
-          autotune: bool = False, tune_cache: Optional[str] = None):
+          autotune: bool = False, tune_cache: Optional[str] = None,
+          engine: Optional[bool] = None, engine_kernel: bool = False):
     if autotune:
         from repro.kernels import tuning
         tuning.load_cache(cache_dir=tune_cache, verbose=True)
@@ -62,6 +110,17 @@ def serve(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     key = jax.random.PRNGKey(1)
+
+    if engine is None:
+        from repro.engine import engine_compatible
+        engine = engine_compatible(cfg) and not profile_mesh
+    if engine:
+        return _engine_serve(
+            model, params, key, batch=batch, prompt_len=prompt_len,
+            max_new=max_new, profile=profile,
+            profile_targets=profile_targets,
+            profile_max_probes=profile_max_probes,
+            engine_kernel=engine_kernel)
 
     prefill = jax.jit(build_prefill_step(
         model, ShapeConfig("pf", cache_len, batch, "prefill")))
@@ -166,6 +225,11 @@ def main():
                     help="load DSE-tuned kernel configs from the eval cache")
     ap.add_argument("--tune-cache", default=None,
                     help="eval cache dir (default .repro_cache/dse)")
+    ap.add_argument("--no-engine", action="store_true",
+                    help="force the legacy lock-step loop instead of the "
+                         "continuous-batching engine")
+    ap.add_argument("--engine-kernel", action="store_true",
+                    help="decode through the paged_attention Pallas kernel")
     args = ap.parse_args()
     from repro.launch.mesh import parse_mesh_arg
     toks = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
@@ -173,7 +237,9 @@ def main():
                  profile_targets=tuple(args.profile_targets.split(",")),
                  profile_every=args.profile_every,
                  profile_mesh=parse_mesh_arg(args.mesh),
-                 autotune=args.autotune, tune_cache=args.tune_cache)
+                 autotune=args.autotune, tune_cache=args.tune_cache,
+                 engine=False if args.no_engine else None,
+                 engine_kernel=args.engine_kernel)
     print("sampled token ids (first sequence):", toks[0].tolist())
 
 

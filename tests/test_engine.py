@@ -1,0 +1,404 @@
+"""Continuous-batching engine: scheduling invariants and bit-identity.
+
+Three layers of coverage:
+
+- host-side bookkeeping units (page table refcounts, prefix trie);
+- hypothesis scheduler properties over random request traces, run
+  against deterministic fake steps (arrival order, prompt/decode
+  lengths and shared prefixes drawn freely) — no starvation, page
+  refcounts balance to zero at drain, and batched outputs equal the
+  closed-form sequential replay of every request;
+- real-model end-to-end: a mixed trace served by the engine is
+  bit-identical to the unbatched reference serving path, with zero
+  retraces and a populated per-phase cycle bill, through both the
+  dense-gather decode and the paged-attention Pallas kernel.
+"""
+import json
+import os
+import sys
+import types
+
+import jax
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "tools"))
+
+from repro.engine import (EngineConfig, InferenceEngine, NULL_PAGE,
+                          PagePoolExhausted, PageTable, PrefixTree,
+                          engine_compatible)
+
+
+# ------------------------------------------------- page table / trie
+
+def test_pagetable_alloc_share_free_roundtrip():
+    t = PageTable(8, 16)
+    assert t.free_pages == 7 and t.balanced()
+    a = t.alloc(3)
+    assert len(set(a)) == 3 and NULL_PAGE not in a
+    assert t.used_pages == 3 and t.peak_used == 3
+    t.share(a[0])
+    t.free(a[0])
+    assert t.used_pages == 3          # still referenced once
+    for p in a:
+        t.free(p)
+    assert t.balanced() and t.peak_used == 3
+
+
+def test_pagetable_errors():
+    t = PageTable(4, 16)
+    with pytest.raises(PagePoolExhausted):
+        t.alloc(4)                    # only 3 non-null pages exist
+    p = t.alloc(1)[0]
+    t.free(p)
+    with pytest.raises(ValueError):
+        t.free(p)                     # double free
+    with pytest.raises(ValueError):
+        t.share(p)                    # share of a dead page
+    with pytest.raises(ValueError):
+        PageTable(1, 16)              # no room for the null page
+
+
+def test_prefix_tree_match_insert_clear():
+    t = PageTable(16, 4)
+    tree = PrefixTree(t)
+    pages = t.alloc(3)
+    keys = [(1, 2, 3, 4), (5, 6, 7, 8), (9, 10, 11, 12)]
+    assert tree.insert(keys, pages) == 3
+    # full hit takes one reference per page for the caller
+    got = tree.match(keys[:2])
+    assert got == pages[:2] and tree.hits == 2
+    # diverging path stops at the shared prefix
+    assert tree.match([keys[0], (0, 0, 0, 0)]) == pages[:1]
+    assert tree.misses == 1
+    assert tree.lookup(keys) == 3     # lookup takes no references
+    for p in got + pages[:1]:
+        t.free(p)
+    for p in pages:                   # the requests' own references
+        t.free(p)
+    assert not t.balanced()           # tree still holds its references
+    tree.clear()
+    assert t.balanced() and tree.nodes == 0
+
+
+# ------------------------------------- scheduler properties (fake steps)
+
+_FAKE_VOCAB = 997
+_FAKE_PS = 4
+
+
+def _fake_prefill_tok(prompt):
+    return (sum(prompt) * 13 + (len(prompt) - 1) * 5) % _FAKE_VOCAB
+
+
+def _fake_next_tok(tok, pos):
+    return (tok * 31 + pos * 7) % _FAKE_VOCAB
+
+
+def _fake_replay(prompt, max_new):
+    """Closed-form sequential (batch-1) serving of one request."""
+    out = [_fake_prefill_tok(prompt)]
+    for i in range(max_new - 1):
+        out.append(_fake_next_tok(out[-1], len(prompt) + i))
+    return out
+
+
+class _FakeStepEngine(InferenceEngine):
+    """Engine with deterministic host-side step fakes: decode output
+    depends only on the lane's own (token, position), so any batching
+    or padding mistake in the scheduler shows up as a token diff."""
+
+    def _build(self, phase, size):
+        cfg, c = self.model.cfg, self.config
+        if phase == "prefill":
+            def prefill(params, batch):
+                toks = np.asarray(batch["tokens"])
+                li = int(np.asarray(batch["last_idx"])[0])
+                tok = (int(toks.sum()) * 13 + li * 5) % _FAKE_VOCAB
+                logits = np.zeros((1, _FAKE_VOCAB), np.float32)
+                logits[0, tok] = 1.0
+                shape = (cfg.num_layers, size, c.page_size,
+                         cfg.num_kv_heads, cfg.resolved_head_dim)
+                return (logits, np.zeros(shape, np.float32),
+                        np.zeros(shape, np.float32))
+            return prefill
+        if phase == "cache":
+            return lambda pk, pv, k, v, ids: (pk, pv)
+
+        def decode(params, pk, pv, batch):
+            t = np.asarray(batch["tokens"])[:, 0].astype(np.int64)
+            p = np.asarray(batch["pos"]).astype(np.int64)
+            nt = ((t * 31 + p * 7) % _FAKE_VOCAB).astype(np.int32)
+            return np.zeros((size, _FAKE_VOCAB), np.float32), pk, pv, nt
+        return decode
+
+
+def _fake_engine(**overrides):
+    cfg = types.SimpleNamespace(
+        family="llama", frontend="none", num_layers=1, num_kv_heads=1,
+        resolved_head_dim=2, kv_cache_dtype="float32")
+    model = types.SimpleNamespace(cfg=cfg)
+    kw = dict(page_size=_FAKE_PS, pool_pages=10, max_pages=6,
+              buckets=(1, 2, 4))
+    kw.update(overrides)
+    return _FakeStepEngine(model, None, EngineConfig(**kw))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                # dev-only dependency
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _traces(draw):
+        """Random request traces: shared prefixes (full pages),
+        free-form tails, mixed decode budgets, arbitrary arrival."""
+        prefixes = [draw(st.lists(st.integers(0, 50), min_size=_FAKE_PS,
+                                  max_size=_FAKE_PS)) for _ in range(2)]
+        n = draw(st.integers(1, 8))
+        reqs = []
+        for _ in range(n):
+            base = prefixes[draw(st.integers(0, 1))] \
+                if draw(st.booleans()) else []
+            tail = draw(st.lists(st.integers(0, 50), min_size=1,
+                                 max_size=3 * _FAKE_PS))
+            max_new = draw(st.integers(1, 2 * _FAKE_PS))
+            prompt = (base + tail)[:6 * _FAKE_PS - max_new + 1]
+            reqs.append((prompt, max_new))
+        return reqs
+
+    @settings(max_examples=40, deadline=None)
+    @given(_traces())
+    def test_random_trace_matches_sequential_replay(reqs):
+        eng = _fake_engine()
+        rids = [eng.submit(p, m) for p, m in reqs]
+        done = eng.run()
+        by_rid = {r.rid: r for r in done}
+        assert sorted(by_rid) == sorted(rids)      # no starvation
+        for rid, (prompt, max_new) in zip(rids, reqs):
+            assert by_rid[rid].out_tokens == _fake_replay(prompt, max_new)
+        eng.drain()
+        assert eng.table.balanced()
+        assert eng.table.peak_used <= eng.config.pool_pages - 1
+
+    @settings(max_examples=20, deadline=None)
+    @given(_traces(), st.booleans())
+    def test_random_trace_page_accounting(reqs, prefix_cache):
+        eng = _fake_engine(pool_pages=8, prefix_cache=prefix_cache)
+        for p, m in reqs:
+            eng.submit(p, m)
+        done = eng.run()
+        assert all(len(r.out_tokens) == m
+                   for r, (_, m) in zip(sorted(done, key=lambda r: r.rid),
+                                        reqs))
+        assert all(not r.pages for r in done)      # released on finish
+        eng.drain()
+        assert eng.table.balanced()
+
+
+def test_fake_engine_prefix_sharing_counts():
+    eng = _fake_engine()
+    shared = list(range(_FAKE_PS))
+    eng.submit(shared + [7, 8], 2)
+    eng.submit(shared + [9], 2)
+    eng.run()
+    st_ = eng.stats()
+    assert st_["prefix_hits"] == 1 and st_["prefix_misses"] == 1
+    assert {r.shared_pages for r in eng.reap()} == {0, 1}
+    eng.drain()
+    assert eng.table.balanced()
+
+
+def test_submit_validation_and_compat():
+    eng = _fake_engine()
+    with pytest.raises(ValueError):
+        eng.submit([], 2)
+    with pytest.raises(ValueError):
+        eng.submit([1], 0)
+    with pytest.raises(ValueError):                # needs > max_pages
+        eng.submit(list(range(6 * _FAKE_PS)), _FAKE_PS)
+    bad = types.SimpleNamespace(cfg=types.SimpleNamespace(
+        family="ssm", frontend="none"))
+    assert not engine_compatible(bad.cfg)
+    with pytest.raises(ValueError):
+        InferenceEngine(bad, None)
+
+
+def test_fcfs_head_blocks_until_pages_free():
+    """A large head-of-queue request waits for pool pressure to clear
+    but is never overtaken (and eventually completes)."""
+    eng = _fake_engine(pool_pages=8, max_pages=6, buckets=(1, 2))
+    eng.submit(list(range(10)), 2)                 # 3 pages
+    eng.submit(list(range(16)), 5)                 # 5 pages: must wait
+    eng.submit([1, 2], 1)                          # 1 page: behind head
+    done = eng.run()
+    assert [r.rid for r in done] == [0, 1, 2]
+    assert all(len(r.out_tokens) == m
+               for r, m in zip(done, (2, 5, 1)))
+    eng.drain()
+    assert eng.table.balanced()
+
+
+# ------------------------------------------- real model, bit-identity
+
+def _reference_serve(model, params, prompt, max_new):
+    """Unbatched (batch-1, dense-cache) reference token stream."""
+    import jax.numpy as jnp
+    from repro.configs.base import ShapeConfig
+    from repro.distributed.steps import build_decode_step, build_prefill_step
+    P = len(prompt)
+    pf = jax.jit(build_prefill_step(model, ShapeConfig("r", 128, 1,
+                                                       "prefill")))
+    dec = jax.jit(build_decode_step(model))
+    lg, cache = pf(params, {"tokens": jnp.array([prompt], jnp.int32)})
+    nt = jnp.argmax(lg, -1).astype(jnp.int32)
+    out = [int(nt[0])]
+    for i in range(max_new - 1):
+        lg, cache, nt = dec(params, cache, {"tokens": nt[:, None],
+                                            "pos": jnp.int32(P + i)})
+        out.append(int(nt[0]))
+    return out
+
+
+def _mixed_trace(vocab, seed=7):
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, vocab, 16).tolist()
+    prompts = [prefix + rng.integers(0, vocab, 5).tolist(),
+               rng.integers(0, vocab, 7).tolist(),
+               prefix + rng.integers(0, vocab, 9).tolist()]
+    return prompts, [5, 3, 4]
+
+
+def test_engine_bit_identical_and_probed(tiny_model):
+    cfg, model, params = tiny_model
+    prompts, max_new = _mixed_trace(cfg.vocab_size)
+    refs = [_reference_serve(model, params, p, m)
+            for p, m in zip(prompts, max_new)]
+    eng = InferenceEngine(model, params, EngineConfig(
+        page_size=16, pool_pages=16, max_pages=2, buckets=(1, 2, 4),
+        probe=True, interpret=True))
+    for p, m in zip(prompts, max_new):
+        eng.submit(p, m)
+    done = eng.run()
+    for r, ref in zip(done, refs):
+        assert r.out_tokens == ref                 # bit-identical
+    stats = eng.stats()
+    assert stats["retraces"] == 0
+    assert stats["prefix_hits"] >= 1               # third request reuses
+    assert all(v["cycles"] > 0 for v in stats["phases"].values())
+    assert all(r.phase_cycles["prefill"] > 0 for r in done)
+    assert all(r.phase_cycles["decode"] > 0 for r in done)
+    assert "prefill" in eng.phase_table()
+    assert "shared pages" in eng.request_table(done)
+    eng.drain()
+    assert eng.table.balanced()
+    eng.close()
+
+
+@pytest.mark.slow
+def test_engine_kernel_path_bit_identical(tiny_model):
+    """Same trace through the paged-attention Pallas decode kernel."""
+    cfg, model, params = tiny_model
+    prompts, max_new = _mixed_trace(cfg.vocab_size)
+    refs = [_reference_serve(model, params, p, m)
+            for p, m in zip(prompts, max_new)]
+    eng = InferenceEngine(model, params, EngineConfig(
+        page_size=16, pool_pages=16, max_pages=2, buckets=(1, 4),
+        use_kernel=True, pages_per_step=2, interpret=True))
+    for p, m in zip(prompts, max_new):
+        eng.submit(p, m)
+    done = eng.run()
+    for r, ref in zip(done, refs):
+        assert r.out_tokens == ref
+    assert eng.stats()["retraces"] == 0
+    eng.drain()
+    assert eng.table.balanced()
+
+
+def test_paged_attention_kernel_matches_dense():
+    """Kernel-level: Pallas paged attention equals the dense-gather
+    einsum reference bit for bit, across pipelining depths."""
+    import jax.numpy as jnp
+    from repro.kernels.paged_attention import paged_attention
+    B, KV, G, HD, PS, NP, POOL = 3, 2, 2, 8, 4, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    q = jax.random.normal(ks[0], (B, KV, G, HD), jnp.float32)
+    pk = jax.random.normal(ks[1], (POOL, PS, KV, HD)).astype(jnp.bfloat16)
+    pv = jax.random.normal(ks[2], (POOL, PS, KV, HD)).astype(jnp.bfloat16)
+    pages = jax.random.permutation(
+        ks[3], POOL)[:B * NP].reshape(B, NP).astype(jnp.int32)
+    pos = jnp.array([0, 7, 15], jnp.int32)
+    s_max = PS * NP
+    kd = pk[pages].reshape(B, s_max, KV, HD)
+    vd = pv[pages].reshape(B, s_max, KV, HD)
+    qg = q[:, None]
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.bfloat16),
+                   kd.astype(jnp.bfloat16),
+                   preferred_element_type=jnp.float32) / np.sqrt(HD)
+    mask = jnp.arange(s_max)[None, :] <= pos[:, None]
+    s = jnp.where(mask[:, None, None, None, :], s, -jnp.inf)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    ref = jnp.einsum("bkgqs,bskh->bkgqh",
+                     (p / p.sum(-1, keepdims=True)).astype(jnp.bfloat16),
+                     vd.astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32)[:, :, :, 0]
+    for pps in (1, 2, 4):
+        out = paged_attention(q, pk, pv, pages, pos, pages_per_step=pps,
+                              interpret=True)
+        assert np.array_equal(np.asarray(out), np.asarray(ref)), pps
+
+
+def test_paged_attention_search_space_registered():
+    from repro.kernels.search_spaces import SPACES, paged_attention_space
+    assert SPACES["paged_attention"] is paged_attention_space
+    space = paged_attention_space(B=2, KV=2, G=1, HD=8, page_size=4,
+                                  n_pages=4, pool_pages=16,
+                                  pages_per_step=(1, 2, 4))
+    assert space.candidates() == [{"pages_per_step": v} for v in (1, 2, 4)]
+    fn = space.bind({"pages_per_step": 2})
+    out = fn(*space.args)
+    assert out.shape == (2, 2, 1, 8)
+    assert not space.is_valid({"pages_per_step": 3})
+
+
+@pytest.mark.slow
+def test_serve_wrapper_bit_identical_to_legacy():
+    """launch.serve routed through the engine returns exactly the
+    legacy lock-step loop's tokens (flags preserved, batch=1 incl.)."""
+    from repro.launch.serve import serve
+    a = serve(batch=2, prompt_len=9, max_new=3, engine=False)
+    b = serve(batch=2, prompt_len=9, max_new=3, engine=True)
+    assert np.array_equal(a, b)
+    c = serve(batch=1, prompt_len=5, max_new=2, engine=True, profile=True)
+    d = serve(batch=1, prompt_len=5, max_new=2, engine=False)
+    assert np.array_equal(c, d)
+
+
+@pytest.mark.slow
+def test_engine_soak_short():
+    from repro.engine.soak import soak
+    out = soak(waves=2, requests_per_wave=4, seed=1, verbose=False)
+    assert out["served"] == 8 and out["retraces"] == 0
+
+
+# --------------------------------------------------- golden lock
+
+def test_engine_golden_locked():
+    import regen_golden
+    path = regen_golden.golden_path(regen_golden.ENGINE_CASE)
+    assert os.path.exists(path), \
+        "missing tests/golden/engine_serve.json — run tools/regen_golden.py"
+    with open(path) as f:
+        golden = json.load(f)
+    if golden["jax"] != jax.__version__:
+        pytest.skip(f"golden for jax {golden['jax']}, running "
+                    f"{jax.__version__}")
+    got = json.loads(regen_golden.encode(regen_golden.run_engine_case()))
+    assert got == golden, (
+        "engine serving record drifted — inspect with `python "
+        "tools/regen_golden.py --diff --case engine_serve`")
+    assert golden["stats"]["retraces"] == 0
+    assert golden["stats"]["balanced_after_drain"] is True

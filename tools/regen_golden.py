@@ -109,6 +109,62 @@ CASES: Dict[str, Callable[[], Tuple[Callable, tuple, Any]]] = {
     "transformer_step": _case_transformer_step,
 }
 
+# the serving-engine case has its own document shape (per-request phase
+# bills instead of a single probe record), so it dispatches separately
+ENGINE_CASE = "engine_serve"
+
+
+def run_engine_case() -> Dict[str, Any]:
+    """Mixed request trace through the continuous-batching engine with
+    probing on: pins every decoded token, per-request per-phase cycle
+    bill, page sharing, bucket histogram, and the zero-retrace count."""
+    import jax
+    import numpy as np
+    from repro.configs.registry import smoke_config
+    from repro.engine import EngineConfig, InferenceEngine
+    from repro.models import Model
+
+    cfg = smoke_config("tinyllama-1.1b")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(11)
+    prefix = rng.integers(0, cfg.vocab_size, 16).tolist()
+    prompts = [prefix + rng.integers(0, cfg.vocab_size, 5).tolist(),
+               rng.integers(0, cfg.vocab_size, 7).tolist(),
+               prefix + rng.integers(0, cfg.vocab_size, 9).tolist(),
+               rng.integers(0, cfg.vocab_size, 13).tolist()]
+    max_new = [5, 3, 4, 6]
+    eng = InferenceEngine(model, params, EngineConfig(
+        page_size=16, pool_pages=32, max_pages=4, buckets=(1, 2, 4),
+        probe=True, interpret=True))
+    for p, m in zip(prompts, max_new):
+        eng.submit(p, m)
+    done = eng.run()
+    st = eng.stats()
+    eng.drain()
+    balanced = eng.table.balanced()
+    eng.close()
+    return {
+        "case": ENGINE_CASE, "jax": jax.__version__,
+        "requests": [{
+            "rid": r.rid, "prompt_len": len(r.prompt),
+            "out_tokens": list(r.out_tokens),
+            "phase_cycles": dict(r.phase_cycles),
+            "decode_batches": list(r.decode_batches),
+            "shared_pages": r.shared_pages,
+        } for r in done],
+        "phases": st["phases"],
+        "stats": {
+            "retraces": st["retraces"],
+            "pages_peak": st["pages_peak"],
+            "prefix_hits": st["prefix_hits"],
+            "prefix_misses": st["prefix_misses"],
+            "buckets": {str(k): v for k, v in st["buckets"].items()},
+            "steps_traced": st["steps_traced"],
+            "balanced_after_drain": balanced,
+        },
+    }
+
 
 # ------------------------------------------- per-arch registry cases
 
@@ -215,6 +271,8 @@ def run_case(name: str) -> Dict[str, Any]:
     import jax
     from repro.core import probe
 
+    if name == ENGINE_CASE:
+        return run_engine_case()
     arch_cases = list_arch_cases()
     if name in arch_cases:
         return run_arch_case(arch_cases[name])
@@ -248,7 +306,7 @@ def golden_path(name: str) -> str:
 
 
 def main(argv=None) -> int:
-    all_names = sorted(CASES) + sorted(list_arch_cases())
+    all_names = sorted(CASES) + [ENGINE_CASE] + sorted(list_arch_cases())
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--case", choices=all_names, default=None,
                     help="regenerate one case (default: all)")
