@@ -1,0 +1,94 @@
+"""Telemetry control-plane overhead + sentinel detection quality.
+
+Publishing to the :class:`~repro.telemetry.TelemetryBus` happens only
+decode-side (streaming-sink worker, window boundaries, engine phase
+steps) — never inside the jitted step — so the cost that matters is
+host nanoseconds per published ring row, and it must stay near zero
+relative to the decode work it rides on.  Rows:
+
+- ``telemetry/bus_publish``    — ``stream.add`` cost per 64-duration
+  ring row, gated as ``bus_ns_per_row``.  NOTE: the committed baseline
+  is a *budget* (generous multiple of the measured value on the
+  baseline machine), not a point estimate — the gate exists to catch
+  order-of-magnitude blowups (an accidental O(n) scan per row, a lock
+  convoy), not scheduler noise on shared CI runners.
+- ``telemetry/window_roll``    — window close + sentinel judgement.
+- ``telemetry/sentinel_sweep`` — the seeded fault sweep from
+  tests/test_telemetry.py as a metric: ``alerts`` (planted faults
+  detected, HIGHER_BETTER) and ``false_positives`` (alerts on
+  stationary traffic, LOWER_BETTER) are exact deterministic integers.
+- ``telemetry/status_doc``     — /status + /probes + /metrics render.
+"""
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.telemetry import (DriftSentinel, TelemetryBus, render_metrics)
+from repro.telemetry.server import _probes_doc, render_json
+from repro.testing.faults import (FaultDriver, RampFault, StepFault,
+                                  StragglerFault)
+
+
+def run():
+    rng = np.random.default_rng(0)
+
+    # -- publish cost per ring row (64 durations, the sink's row shape)
+    bus = TelemetryBus()
+    stream = bus.stream("bench", tuple(f"p{i}" for i in range(8)))
+    rows = [rng.integers(100, 100_000, 64) for _ in range(64)]
+    for r in rows:                                  # warm caches
+        stream.add(0, r)
+    n = 2000
+    t0 = time.perf_counter()
+    for i in range(n):
+        stream.add(i % 8, rows[i % len(rows)])
+    dt = time.perf_counter() - t0
+    ns_row = dt / n * 1e9
+    emit("telemetry/bus_publish", dt / n * 1e6,
+         f"bus_ns_per_row={ns_row:.0f};durations_per_row=64")
+
+    # -- window roll + sentinel judgement (subscriber attached)
+    DriftSentinel(bus)
+    m = 500
+    t0 = time.perf_counter()
+    for i in range(m):
+        stream.add(i % 8, rows[i % len(rows)])
+        stream.roll(i, i + 1)
+    dt = time.perf_counter() - t0
+    emit("telemetry/window_roll", dt / m * 1e6,
+         f"windows={stream.windows}")
+
+    # -- detection quality: exact deterministic integers
+    planted, detected, false_positives = 0, 0, 0
+    scenarios = [
+        [StepFault("attn", at_window=8)],
+        [RampFault("mlp", start_window=8)],
+        [StragglerFault(device=2, at_window=8)],
+    ]
+    for seed in range(3):
+        for faults in scenarios:
+            mesh = any(isinstance(f, StragglerFault) for f in faults)
+            b = TelemetryBus()
+            s = DriftSentinel(b)
+            FaultDriver(b, seed=seed, n_devices=4 if mesh else 1,
+                        faults=faults).run(20)
+            planted += 1
+            detected += bool(s.tripped())
+        b = TelemetryBus()
+        s = DriftSentinel(b)
+        FaultDriver(b, seed=seed, n_devices=4).run(20)
+        false_positives += len(s.tripped())
+    emit("telemetry/sentinel_sweep", 0.0,
+         f"alerts={detected};planted={planted};"
+         f"false_positives={false_positives}")
+
+    # -- serving-side render cost (what one HTTP poll computes)
+    t0 = time.perf_counter()
+    k = 50
+    for _ in range(k):
+        body = render_json(bus.status())
+        body += render_json(_probes_doc(bus))
+        body += render_metrics(bus).encode()
+    emit("telemetry/status_doc", (time.perf_counter() - t0) / k * 1e6,
+         f"resp_bytes={len(body)}")

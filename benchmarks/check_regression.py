@@ -35,10 +35,11 @@ LOWER_BETTER = (
     "cycles", "span", "state_B", "state_bytes", "dram_B", "extra_eqns",
     "probe_ops", "probe_bytes", "measurements", "probed_steps",
     "mean_cycles", "skew", "wire_B", "err", "sub_walks",
-    "retraces", "pages_peak",
+    "retraces", "pages_peak", "bus_ns_per_row", "false_positives",
 )
 HIGHER_BETTER = ("speedup_x1000", "saving", "exact", "cache_hits",
-                 "reduction_x1000", "graphs", "invariants", "hit_x1000")
+                 "reduction_x1000", "graphs", "invariants", "hit_x1000",
+                 "alerts")
 
 _NUM = re.compile(r"^(-?\d+(?:\.\d+)?)(?:[%x]?)$")
 

@@ -47,7 +47,7 @@ def main() -> None:
                             bench_dse, bench_engine, bench_incremental,
                             bench_instrument, bench_latency_impact,
                             bench_offload, bench_overhead, bench_roofline,
-                            bench_streaming, common)
+                            bench_streaming, bench_telemetry, common)
     benches = [
         ("Table II  (cycle accuracy, 28 designs)", bench_accuracy),
         ("Conformance (graphs verified / second)", bench_conformance),
@@ -60,6 +60,7 @@ def main() -> None:
         ("Fig 1/14 + Table IV (discrepancies)", bench_discrepancy),
         ("Streaming (ProbeSession per-step overhead)", bench_streaming),
         ("Engine    (paged continuous-batching serving)", bench_engine),
+        ("Telemetry (bus publish + drift sentinel)", bench_telemetry),
         ("Distributed (mesh probe: skew vs mesh size)", bench_distributed),
         ("Roofline  (dry-run derived)", bench_roofline),
     ]

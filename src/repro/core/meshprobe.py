@@ -563,7 +563,8 @@ class MeshProbeSession:
 
     def __init__(self, fn, mesh=None, in_specs=None, out_specs=None,
                  config: Optional[ProbeConfig] = None, *,
-                 window_steps: int = 16, ema_alpha: float = 0.1):
+                 window_steps: int = 16, ema_alpha: float = 0.1,
+                 bus=None, source: str = "mesh"):
         if isinstance(fn, MeshProbedFunction):
             self.mpf = fn
         else:
@@ -574,6 +575,9 @@ class MeshProbeSession:
                                   config or ProbeConfig())
         self.window_steps = int(window_steps)
         self.ema_alpha = float(ema_alpha)
+        self.bus = bus
+        self.source = source
+        self._stream = None
         self.stats: Optional[StreamAggregator] = None
         self._state = None
         self._steps = 0
@@ -608,8 +612,20 @@ class MeshProbeSession:
             self.mpf.ensure_built(*args)
             self._state = self.mpf.init_state()
             n = self.mpf.assignment.n
-            self.stats = StreamAggregator(self.mpf.n_devices * n,
-                                          ema_alpha=self.ema_alpha)
+            # per-window per-device deltas publish through the bus
+            # abstraction (device-major stream); `stats` stays the
+            # stream's aggregator, as before the telemetry refactor
+            from repro.telemetry.bus import ProbeStream
+            paths = self.mpf.assignment.paths
+            if self.bus is not None:
+                self._stream = self.bus.stream(
+                    self.source, paths, n_devices=self.mpf.n_devices,
+                    ema_alpha=self.ema_alpha)
+            else:
+                self._stream = ProbeStream(
+                    self.source, paths, n_devices=self.mpf.n_devices,
+                    ema_alpha=self.ema_alpha)
+            self.stats = self._stream.agg
             self._prev_totals = np.zeros(self.mpf.n_devices * n, np.int64)
             self._t0 = time.perf_counter()
         out, self._state = self.mpf.stateful_call(self._state, *args)
@@ -632,7 +648,9 @@ class MeshProbeSession:
         totals = self._read_totals()
         delta = totals - self._prev_totals
         for row in np.nonzero(delta)[0]:
-            self.stats.add(int(row), np.array([delta[row]]))
+            self._stream.add(int(row), np.array([delta[row]]))
+        self._stream.roll(self._win_start, self._steps,
+                          exact_totals=delta)
         self._prev_totals = totals
         self._win_start = self._steps
 

@@ -523,3 +523,40 @@ def engine_request_table(requests) -> str:
             f"{r.phase_cycles.get('decode', 0):>16}{avg_b:>7.2f}"
             f"{r.shared_pages:>14}")
     return "\n".join(lines)
+
+
+# ------------------------------------------------- telemetry sentinel
+
+def telemetry_alert_table(events) -> str:
+    """Fired :class:`~repro.telemetry.sentinel.DriftEvent` rows, most
+    recent last — the on-exit summary serve/train print when a drift
+    sentinel ran (``--status-port``)."""
+    if not events:
+        return "# sentinel: no drift events"
+    lines = [f"{'window':>7}  {'kind':<16}{'stream':<18}{'probe':<22}"
+             f"{'dev':>4}{'severity':>10}{'trip':>7}"]
+    for e in events:
+        dev = "-" if e.device is None else str(e.device)
+        lines.append(f"{e.window:>7}  {e.kind:<16}{e.stream:<18}"
+                     f"{e.path:<22}{dev:>4}{e.severity:>10.3f}"
+                     f"{e.threshold:>7.2f}")
+    return "\n".join(lines)
+
+
+def sentinel_table(sentinel) -> str:
+    """Per-(stream, probe) detector state of a live
+    :class:`~repro.telemetry.sentinel.DriftSentinel`: warmup progress,
+    reference sample count, and current consecutive-breach counters."""
+    rows = sorted(sentinel._rows.items())
+    if not rows:
+        return "# sentinel: no windows observed yet"
+    warm = sentinel.cfg.warmup_windows
+    lines = [f"{'stream':<18}{'row':>5}{'windows':>9}{'ref_n':>8}"
+             f"{'state':<10}{'breaches':<24}"]
+    for (stream, row), st in rows:
+        state = "warmup" if st.windows_seen < warm else "armed"
+        br = ",".join(f"{k}:{v}" for k, v in st.breaches.items() if v)
+        lines.append(f"{stream:<18}{row:>5}{st.windows_seen:>9}"
+                     f"{st.ref_count:>8}  {state:<10}{br or '-':<24}")
+    lines.append(f"# {len(sentinel.events)} event(s) fired")
+    return "\n".join(lines)

@@ -184,30 +184,70 @@ class StreamingSink(HostSink):
 
     ``dump`` (the ordered ``io_callback`` target) only enqueues the ring
     row; a daemon worker thread decodes it to per-call durations and
-    folds them into the :class:`StreamAggregator` — the raw history is
-    never retained, so memory stays constant no matter how many rings
-    spill. ``records()`` therefore returns ``[]``; use a plain
-    ``HostSink`` when full per-iteration history is wanted.
+    folds them into a :class:`~repro.telemetry.bus.ProbeStream` — the
+    pub/sub refactoring of the old private ``StreamAggregator`` (the
+    aggregation code path is unchanged; ``stats`` still exposes the
+    aggregator).  The raw history is never retained, so memory stays
+    constant no matter how many rings spill.  ``records()`` therefore
+    returns ``[]``; use a plain ``HostSink`` when full per-iteration
+    history is wanted.
+
+    With a :class:`~repro.telemetry.bus.TelemetryBus` attached, the
+    stream is registered on the bus under ``source`` and the session's
+    window rolls flow through the same FIFO queue as the ring rows
+    (``queue_roll``), so bus windows close in spill order.
     """
 
-    def __init__(self, ema_alpha: float = 0.1):
+    def __init__(self, ema_alpha: float = 0.1, *, bus=None,
+                 source: str = "session"):
         super().__init__()
         self.ema_alpha = ema_alpha
-        self.stats: Optional[StreamAggregator] = None
+        self.bus = bus
+        self.source = source
+        self._stream = None
         self.dropped = 0
         self._q: "queue.Queue" = queue.Queue()
         self._worker: Optional[threading.Thread] = None
 
-    def bind(self, n_probes: int):
+    @property
+    def stats(self) -> Optional[StreamAggregator]:
+        """The live aggregator (the bus stream's, post-refactor)."""
+        return self._stream.agg if self._stream is not None else None
+
+    def bind(self, n_probes: int, paths: Optional[Tuple[str, ...]] = None):
         """Size the aggregator (probe count is known only post-build)."""
-        if self.stats is None or self.stats.n != n_probes:
-            self.stats = StreamAggregator(n_probes, self.ema_alpha)
+        paths = tuple(paths) if paths is not None else \
+            tuple(f"probe{i}" for i in range(n_probes))
+        if self._stream is None or self._stream.paths != paths:
+            from repro.telemetry.bus import ProbeStream
+            if self.bus is not None:
+                self._stream = self.bus.stream(self.source, paths,
+                                               ema_alpha=self.ema_alpha)
+            else:
+                self._stream = ProbeStream(self.source, paths,
+                                           ema_alpha=self.ema_alpha)
         if self._worker is None or not self._worker.is_alive():
             self._worker = threading.Thread(target=self._drain, daemon=True)
             self._worker.start()
 
     def _store(self, probe_id: int, base_count: int, row: np.ndarray):
-        self._q.put((probe_id, row))
+        self._q.put(("row", probe_id, row))
+
+    def queue_roll(self, start_step: int, end_step: int,
+                   exact_totals: Optional[np.ndarray] = None):
+        """Enqueue a window-roll marker; the drain worker closes the bus
+        window after folding every ring row queued before it."""
+        self._q.put(("roll", start_step, end_step, exact_totals))
+
+    def _fold(self, per_pid: Dict[int, List[np.ndarray]]):
+        for pid, durs in per_pid.items():
+            try:
+                if self._stream is None:
+                    raise RuntimeError("sink not bound")
+                self._stream.add(pid, np.concatenate(durs))
+            except Exception:
+                self.dropped += 1
+        per_pid.clear()
 
     def _drain(self):
         while True:
@@ -217,7 +257,8 @@ class StreamingSink(HostSink):
                 return
             # batch: grab everything already queued, decode each row to
             # durations (vectorized), then fold ONE concatenated array
-            # per probe — queue FIFO keeps per-probe sample order
+            # per probe per window segment — queue FIFO keeps per-probe
+            # sample order and window-roll ordering
             batch = [item]
             done = 1
             stop = False
@@ -232,20 +273,24 @@ class StreamingSink(HostSink):
                     break
                 batch.append(nxt)
             per_pid: Dict[int, List[np.ndarray]] = {}
-            for pid, row in batch:
+            for item in batch:
+                if item[0] == "roll":
+                    self._fold(per_pid)    # close the segment in order
+                    try:
+                        if self._stream is not None:
+                            self._stream.roll(item[1], item[2],
+                                              exact_totals=item[3])
+                    except Exception:
+                        self.dropped += 1
+                    continue
+                _, pid, row = item
                 try:
                     per_pid.setdefault(pid, []).append(row_durations(row))
                 except Exception:
                     # a poisoned row must not kill the drain thread —
                     # that would turn every later flush() into a hang
                     self.dropped += 1
-            for pid, durs in per_pid.items():
-                try:
-                    if self.stats is None:
-                        raise RuntimeError("sink not bound")
-                    self.stats.add(pid, np.concatenate(durs))
-                except Exception:
-                    self.dropped += 1
+            self._fold(per_pid)
             for _ in range(done):
                 self._q.task_done()
             if stop:
@@ -350,7 +395,8 @@ class ProbeSession:
     def __init__(self, fn: Union[Callable, ProbedFunction],
                  config: Optional[ProbeConfig] = None, *,
                  window_steps: int = 16, max_windows: int = 8,
-                 ema_alpha: float = 0.1, poll_every: int = 1):
+                 ema_alpha: float = 0.1, poll_every: int = 1,
+                 bus=None, source: str = "session"):
         if isinstance(fn, ProbedFunction):
             self.pf = fn
             if config is not None:
@@ -358,7 +404,8 @@ class ProbeSession:
         else:
             self.pf = probe(fn, config if config is not None
                             else ProbeConfig(offload=1.0))
-        self.sink = StreamingSink(ema_alpha=ema_alpha)
+        self.sink = StreamingSink(ema_alpha=ema_alpha, bus=bus,
+                                  source=source)
         # install before build so the Instrumenter captures this sink;
         # close() restores the original and forces a rebuild
         self._orig_sink = self.pf.sink
@@ -407,7 +454,7 @@ class ProbeSession:
     def _start(self, *args, **kwargs):
         self.pf.ensure_built(*args, **kwargs)
         n = self.pf.assignment.n
-        self.sink.bind(n)
+        self.sink.bind(n, paths=self.pf.assignment.paths)
         self._state = self.pf.init_state()
         self._prev_totals = np.zeros(n, np.int64)
         self._win_start = 0
@@ -437,9 +484,15 @@ class ProbeSession:
         if self._steps - self._win_start < self.window_steps:
             return
         totals = self._read_totals()
+        delta = totals - self._prev_totals
         self._windows.append(WindowStat(
             f"[{self._win_start}..{self._steps})", self._win_start,
-            self._steps, totals - self._prev_totals))
+            self._steps, delta))
+        # the device_get above is a barrier: every ordered spill
+        # callback of the window has already enqueued, so the roll
+        # marker closes the bus window at exactly this boundary
+        self.sink.queue_roll(self._win_start, self._steps,
+                             exact_totals=delta)
         self._prev_totals = totals
         self._win_start = self._steps
 

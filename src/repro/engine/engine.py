@@ -99,8 +99,14 @@ class InferenceEngine:
         eng.drain()               # release prefix-cache pages
     """
 
-    def __init__(self, model, params, config: EngineConfig = EngineConfig()):
+    def __init__(self, model, params, config: EngineConfig = EngineConfig(),
+                 *, bus=None):
         cfg = model.cfg
+        # optional telemetry bus: phase/request bills (and, with
+        # probe=True, each step family's duration stream) publish to it
+        # decode-side, making the engine observable over the status
+        # server (docs/telemetry.md). None = exactly the old behavior.
+        self.bus = bus
         if not engine_compatible(cfg):
             raise ValueError(
                 f"engine requires an attention-family token model; got "
@@ -149,7 +155,8 @@ class InferenceEngine:
             from repro.core import ProbeConfig, ProbeSession
             return ProbeSession(fn, ProbeConfig(
                 targets=c.probe_targets, offload=1.0,
-                max_probes=c.probe_max_probes))
+                max_probes=c.probe_max_probes),
+                bus=self.bus, source=f"engine/{phase}x{size}")
         return jax.jit(fn)
 
     def _entry(self, phase: str, size: int):
@@ -196,6 +203,10 @@ class InferenceEngine:
         st = self.phase_stats[phase]
         st["steps"] += 1
         st["cycles"] += delta
+        if self.bus is not None:
+            self.bus.publish_phase(phase, cycles=delta,
+                                   batch=size if phase == "decode"
+                                   else None)
         return out, delta
 
     def retraces(self) -> int:
@@ -284,6 +295,13 @@ class InferenceEngine:
         r.pages = []
         r.done = True
         self._finished.append(r)
+        if self.bus is not None:
+            self.bus.publish_request({
+                "rid": r.rid, "prompt_len": r.prompt_len,
+                "tokens": len(r.out_tokens),
+                "shared_pages": r.shared_pages,
+                "decode_batches": list(r.decode_batches),
+                "phase_cycles": dict(r.phase_cycles)})
 
     def _admit(self):
         while self._waiting and len(self._active) < self.config.buckets[-1]:

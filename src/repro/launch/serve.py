@@ -29,7 +29,7 @@ from repro.models.model import Model
 
 
 def _mesh_decode_session(model, shape, mesh_shape, frontend: bool,
-                         targets, max_probes, window_steps):
+                         targets, max_probes, window_steps, bus=None):
     """Mesh-probed decode: batch (and every cache leaf's batch dim)
     sharded over the probing mesh, so the live session records one
     cycle-counter row per device (docs/distributed.md)."""
@@ -50,13 +50,13 @@ def _mesh_decode_session(model, shape, mesh_shape, frontend: bool,
                    out_specs=(P(axes), cache_spec, P(axes)),
                    config=ProbeConfig(targets=targets,
                                       max_probes=max_probes)),
-        window_steps=window_steps)
+        window_steps=window_steps, bus=bus, source="serve/mesh")
 
 
 def _engine_serve(model, params, key, *, batch: int, prompt_len: int,
                   max_new: int, profile: bool,
                   profile_targets: Tuple[str, ...],
-                  profile_max_probes: int, engine_kernel: bool):
+                  profile_max_probes: int, engine_kernel: bool, bus=None):
     """Serve ``batch`` random prompts through the continuous-batching
     engine (one request per row, decode bucketed at the batch size)."""
     import math
@@ -71,7 +71,7 @@ def _engine_serve(model, params, key, *, batch: int, prompt_len: int,
         buckets=(1, batch) if batch > 1 else (1,),
         use_kernel=engine_kernel, probe=profile,
         probe_targets=profile_targets,
-        probe_max_probes=profile_max_probes))
+        probe_max_probes=profile_max_probes), bus=bus)
     tokens = jax.random.randint(key, (batch, prompt_len), 0,
                                 cfg.vocab_size)
     prompts = np.asarray(tokens)
@@ -102,7 +102,8 @@ def serve(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
           profile_every: int = 8, profile_max_probes: int = 16,
           profile_mesh: Tuple[int, ...] = (),
           autotune: bool = False, tune_cache: Optional[str] = None,
-          engine: Optional[bool] = None, engine_kernel: bool = False):
+          engine: Optional[bool] = None, engine_kernel: bool = False,
+          status_port: Optional[int] = None):
     if autotune:
         from repro.kernels import tuning
         tuning.load_cache(cache_dir=tune_cache, verbose=True)
@@ -111,16 +112,26 @@ def serve(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
     params = model.init(jax.random.PRNGKey(0))
     key = jax.random.PRNGKey(1)
 
+    plane = None
+    if status_port is not None:
+        from repro.telemetry import ControlPlane
+        plane = ControlPlane(status_port).start()
+    bus = plane.bus if plane is not None else None
+
     if engine is None:
         from repro.engine import engine_compatible
         engine = engine_compatible(cfg) and not profile_mesh
     if engine:
-        return _engine_serve(
-            model, params, key, batch=batch, prompt_len=prompt_len,
-            max_new=max_new, profile=profile,
-            profile_targets=profile_targets,
-            profile_max_probes=profile_max_probes,
-            engine_kernel=engine_kernel)
+        try:
+            return _engine_serve(
+                model, params, key, batch=batch, prompt_len=prompt_len,
+                max_new=max_new, profile=profile,
+                profile_targets=profile_targets,
+                profile_max_probes=profile_max_probes,
+                engine_kernel=engine_kernel, bus=bus)
+        finally:
+            if plane is not None:
+                plane.finish()
 
     prefill = jax.jit(build_prefill_step(
         model, ShapeConfig("pf", cache_len, batch, "prefill")))
@@ -131,7 +142,7 @@ def serve(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
         session = _mesh_decode_session(
             model, ShapeConfig("pf", cache_len, batch, "decode"),
             profile_mesh, cfg.frontend != "none", profile_targets,
-            profile_max_probes, max(profile_every, 1))
+            profile_max_probes, max(profile_every, 1), bus=bus)
         decode = session.step
         mesh_session = True
     elif profile:
@@ -140,7 +151,8 @@ def serve(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
             build_decode_step(model),
             ProbeConfig(targets=profile_targets, offload=1.0,
                         max_probes=profile_max_probes),
-            window_steps=max(profile_every, 1))
+            window_steps=max(profile_every, 1),
+            bus=bus, source="serve/decode")
         decode = session.step
     else:
         decode = jax.jit(build_decode_step(model), donate_argnums=(1,))
@@ -204,6 +216,8 @@ def serve(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
             else:
                 print("\n# bottleneck drift across windows")
                 print(final.bump_chart())
+    if plane is not None:
+        plane.finish()
     return toks
 
 
@@ -230,6 +244,9 @@ def main():
                          "continuous-batching engine")
     ap.add_argument("--engine-kernel", action="store_true",
                     help="decode through the paged_attention Pallas kernel")
+    ap.add_argument("--status-port", type=int, default=None,
+                    help="expose live telemetry over HTTP on this port "
+                         "(0 = OS-assigned; prints the bound URL)")
     args = ap.parse_args()
     from repro.launch.mesh import parse_mesh_arg
     toks = serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
@@ -239,7 +256,8 @@ def main():
                  profile_mesh=parse_mesh_arg(args.mesh),
                  autotune=args.autotune, tune_cache=args.tune_cache,
                  engine=False if args.no_engine else None,
-                 engine_kernel=args.engine_kernel)
+                 engine_kernel=args.engine_kernel,
+                 status_port=args.status_port)
     print("sampled token ids (first sequence):", toks[0].tolist())
 
 

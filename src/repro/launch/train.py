@@ -33,7 +33,8 @@ def train(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
           checkpoint_dir: Optional[str] = None, resume: bool = False,
           tcfg: Optional[TrainConfig] = None, log_every: int = 10,
           probe_every: int = 0, autotune: bool = False,
-          tune_cache: Optional[str] = None):
+          tune_cache: Optional[str] = None,
+          status_port: Optional[int] = None):
     if autotune:
         from repro.kernels import tuning
         tuning.load_cache(cache_dir=tune_cache, verbose=True)
@@ -67,6 +68,11 @@ def train(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
             pipe.state.step = int(extra["data_step"])
 
     step_fn = build_train_step(model, tcfg)
+    plane = None
+    if status_port is not None:
+        from repro.telemetry import ControlPlane
+        plane = ControlPlane(status_port).start()
+    bus = plane.bus if plane is not None else None
     session = None
     mesh_session = False
     if probe_targets is not None and probe_mesh:
@@ -86,7 +92,8 @@ def train(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
                        out_specs=(P(), P(), P()),
                        config=ProbeConfig(targets=tuple(probe_targets),
                                           max_probes=16)),
-            window_steps=max(probe_every or log_every, 1))
+            window_steps=max(probe_every or log_every, 1),
+            bus=bus, source="train/mesh")
         run_jitted = session.step
         mesh_session = True
     elif probe_targets is not None:
@@ -94,7 +101,8 @@ def train(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
         session = ProbeSession(
             step_fn, ProbeConfig(targets=tuple(probe_targets),
                                  offload=1.0, max_probes=16),
-            window_steps=max(probe_every or log_every, 1))
+            window_steps=max(probe_every or log_every, 1),
+            bus=bus, source="train/step")
         run_jitted = session.step
     else:
         run_jitted = jax.jit(step_fn, donate_argnums=(0, 1))
@@ -147,6 +155,8 @@ def train(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
                 print(final.heat())
             else:
                 print(final.bump_chart())
+    if plane is not None:
+        plane.finish()
     return params, opt_state, history
 
 
@@ -176,6 +186,9 @@ def main():
                     help="load DSE-tuned kernel configs from the eval cache")
     ap.add_argument("--tune-cache", default=None,
                     help="eval cache dir (default .repro_cache/dse)")
+    ap.add_argument("--status-port", type=int, default=None,
+                    help="expose live telemetry over HTTP on this port "
+                         "(0 = OS-assigned; prints the bound URL)")
     args = ap.parse_args()
     train(args.arch, smoke=not args.full, steps=args.steps,
           batch=args.batch, seq=args.seq,
@@ -184,7 +197,8 @@ def main():
           probe_mesh=parse_mesh_arg(args.mesh),
           probe_every=args.probe_every,
           checkpoint_dir=args.checkpoint_dir, resume=args.resume,
-          autotune=args.autotune, tune_cache=args.tune_cache)
+          autotune=args.autotune, tune_cache=args.tune_cache,
+          status_port=args.status_port)
 
 
 if __name__ == "__main__":

@@ -3,14 +3,19 @@
 ``graphgen`` turns integer seeds into jittable model graphs described
 by JSON-round-trippable ``GraphSpec``s; ``conformance`` asserts the six
 probe exactness invariants on any spec; ``sweep`` runs seed corpora and
-prints ready-to-paste repro commands for failures.
+prints ready-to-paste repro commands for failures; ``faults`` is the
+deterministic fault-injection driver that locks the telemetry drift
+sentinel's detection claims.
 """
 from repro.testing.graphgen import (BlockSpec, GraphSpec, build,
                                     random_spec)
 from repro.testing.conformance import (INVARIANTS, ConformanceError,
                                        repro_command, run_conformance)
+from repro.testing.faults import (FakeClock, FaultDriver, RampFault,
+                                  StepFault, StragglerFault)
 
 __all__ = [
     "BlockSpec", "GraphSpec", "build", "random_spec",
     "INVARIANTS", "ConformanceError", "repro_command", "run_conformance",
+    "FakeClock", "FaultDriver", "RampFault", "StepFault", "StragglerFault",
 ]

@@ -26,6 +26,7 @@ SLOW_TESTS = {
                        "test_dryrun_cell_machinery_smoke"),
     "test_conformance_sweep.py": (
         "test_discovering_spec_seed5_full_conformance",),
+    "test_telemetry.py": ("test_e2e_live_decode_with_status_server",),
 }
 
 # corpus/registry parametrizations where only a fast head stays in the
@@ -101,3 +102,19 @@ def test_fast_job_keeps_hard_timeout_and_slow_filter():
 def test_slow_marker_registered():
     with open(os.path.join(REPO, "pytest.ini")) as f:
         assert "slow:" in f.read()
+
+
+def test_no_hard_coded_ports_in_tests():
+    """Network-facing tests must bind port 0 and read the real port
+    back (``StatusServer.port``) — a hard-coded port is a flake on any
+    shared CI runner."""
+    pat = re.compile(r"""(?:localhost|127\.0\.0\.1)[:"']{1,2}\s*(\d{2,5})"""
+                     r"""|port\s*=\s*(\d+)""")
+    for name in sorted(os.listdir(os.path.join(REPO, "tests"))):
+        if not name.endswith(".py"):
+            continue
+        for m in pat.finditer(_read(name)):
+            port = int(m.group(1) or m.group(2))
+            assert port == 0, \
+                f"{name}: hard-coded port {port} ({m.group(0)!r}); " \
+                f"bind port=0 and read the bound port back"

@@ -1,0 +1,624 @@
+"""Telemetry control plane: bus exactness, HTTP export, drift sentinel.
+
+Four layers of coverage:
+
+- bus/stream units: window deltas are exact aggregate deltas, served
+  rows are exactly the ``StreamAggregator`` values, engine topics and
+  alert rings stay bounded;
+- fault injection (``repro.testing.faults``): a fake-clock
+  deterministic driver plants step-changes, ramps, and single-device
+  stragglers into synthetic streams — the sentinel must fire on every
+  planted fault (naming the right probe/device), within a bounded
+  number of windows, and never on stationary or seed-jittered traffic
+  (zero false positives across a seeded sweep);
+- HTTP: the status server binds port 0 (tests read the real port —
+  no hard-coded ports anywhere), serves key-sorted schema-stable JSON,
+  and ``/probes`` values round-trip bit-exactly;
+- end-to-end (slow): a live probed decode session on the tiny model
+  with the server attached is polled mid-decode and stays
+  bit-identical to the unprobed reference.
+
+Hypothesis property tests (aggregate exactness over random streams,
+sentinel chunking invariance) are dev-only; seeded sweeps assert the
+same properties when hypothesis is absent.
+"""
+import json
+import urllib.error
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.core.streaming import HIST_BUCKETS, StreamAggregator
+from repro.telemetry import (DriftSentinel, ProbeStream, SentinelConfig,
+                             StatusServer, TelemetryBus, hist_quantile,
+                             make_retune_hook, render_metrics)
+from repro.testing.faults import (FakeClock, FaultDriver, RampFault,
+                                  StepFault, StragglerFault)
+
+SWEEP_SEEDS = range(10)
+
+
+def _get(url: str) -> bytes:
+    with urllib.request.urlopen(url, timeout=10) as r:
+        return r.read()
+
+
+def _get_json(url: str):
+    raw = _get(url)
+    return json.loads(raw), raw
+
+
+# ------------------------------------------------------------- bus units
+
+def test_stream_get_or_create_and_unknown():
+    bus = TelemetryBus()
+    a = bus.stream("s", ("x", "y"))
+    assert bus.stream("s") is a                    # get without paths
+    assert bus.stream("s", ("x", "y")) is a        # same shape: same stream
+    b = bus.stream("s", ("x", "y", "z"))           # reshape replaces
+    assert b is not a and b.n_rows == 3
+    with pytest.raises(KeyError):
+        bus.stream("nope")
+
+
+def test_window_frame_exact_deltas():
+    bus = TelemetryBus()
+    frames = []
+    bus.subscribe("window", frames.append)
+    st = bus.stream("s", ("x", "y"))
+    st.add(0, np.array([10, 20, 30]))
+    st.add(1, np.array([5]))
+    f1 = st.roll(0, 4)
+    st.add(0, np.array([1000]))
+    f2 = st.roll(4, 8, exact_totals=np.array([1000, 0]))
+    assert frames == [f1, f2]
+    assert f1.index == 0 and f2.index == 1
+    assert list(f1.counts) == [3, 1] and list(f1.totals) == [60, 5]
+    assert list(f2.counts) == [1, 0] and list(f2.totals) == [1000, 0]
+    assert list(f2.exact_totals) == [1000, 0]
+    # histogram deltas partition the cumulative histogram exactly
+    assert np.array_equal(f1.hist + f2.hist, st.agg.hist)
+    assert f2.p99(0) == hist_quantile(f2.hist[0], 0.99)
+
+
+def test_rows_are_exactly_aggregator_values():
+    rng = np.random.default_rng(0)
+    stream = ProbeStream("s", ("a", "b", "c"))
+    ref = StreamAggregator(3, ema_alpha=0.1)
+    for _ in range(20):
+        pid = int(rng.integers(0, 3))
+        durs = rng.integers(1, 100_000, rng.integers(1, 50))
+        stream.add(pid, durs)
+        ref.add(pid, durs)
+    for row, r in enumerate(stream.rows()):
+        assert r["calls"] == int(ref.count[row])
+        assert r["total_cycles"] == int(ref.total[row])
+        assert r["mean"] == float(ref.total[row]) / ref.count[row]
+        assert r["ema"] == float(ref.ema[row])
+        assert r["min"] == int(ref.min[row])
+        assert r["max"] == int(ref.max[row])
+        assert r["p50"] == ref.quantile(row, 0.50)
+        assert r["p99"] == ref.quantile(row, 0.99)
+
+
+def test_hist_quantile_matches_aggregator_quantile():
+    rng = np.random.default_rng(1)
+    agg = StreamAggregator(1)
+    durs = rng.integers(1, 1 << 20, 500)
+    agg.add(0, durs)
+    for q in (0.0, 0.25, 0.5, 0.9, 0.99, 1.0):
+        assert hist_quantile(agg.hist[0], q) == agg.quantile(0, q)
+    assert hist_quantile(np.zeros(HIST_BUCKETS, np.int64), 0.5) == 0
+
+
+def test_engine_topics_and_bounded_rings():
+    bus = TelemetryBus(max_alerts=3, max_requests=2)
+    phases, requests = [], []
+    bus.subscribe("phase", lambda *a: phases.append(a))
+    bus.subscribe("request", requests.append)
+    bus.publish_phase("decode", cycles=100, batch=4)
+    bus.publish_phase("decode", cycles=50, batch=4)
+    bus.publish_phase("prefill", cycles=7)
+    for i in range(5):
+        bus.publish_request({"rid": i})
+        bus.publish_alert({"kind": "x", "n": i})
+    st = bus.status()
+    assert st["engine"]["phases"]["decode"] == {"steps": 2, "cycles": 150}
+    assert st["engine"]["requests"] == 5
+    assert st["alerts"] == 5                       # total keeps counting
+    assert len(bus.alerts()) == 3                  # ...ring is bounded
+    assert len(bus.engine.recent) == 2
+    assert len(phases) == 3 and len(requests) == 5
+
+
+def test_subscribe_unknown_topic_and_unsubscribe():
+    bus = TelemetryBus()
+    with pytest.raises(ValueError):
+        bus.subscribe("bogus", print)
+    got = []
+    fn = bus.subscribe("window", got.append)
+    st = bus.stream("s", ("x",))
+    st.roll()
+    bus.unsubscribe("window", fn)
+    st.roll()
+    assert len(got) == 1
+
+
+# ----------------------------------------------------- fault injection
+
+def test_stationary_traffic_zero_false_positives():
+    """The acceptance sweep: jittered but stationary traffic, many
+    seeds, single-device and mesh — the sentinel stays silent."""
+    for seed in SWEEP_SEEDS:
+        for n_devices in (1, 4):
+            bus = TelemetryBus()
+            s = DriftSentinel(bus)
+            FaultDriver(bus, seed=seed, n_devices=n_devices).run(20)
+            assert s.tripped() == [], (seed, n_devices, s.tripped())
+
+
+def test_step_fault_fires_once_named_and_bounded():
+    cfg = SentinelConfig()
+    for seed in SWEEP_SEEDS:
+        bus = TelemetryBus()
+        s = DriftSentinel(bus, cfg)
+        FaultDriver(bus, seed=seed,
+                    faults=[StepFault("attn", at_window=8)]).run(20)
+        evs = s.tripped()
+        # exactly once (rebaseline adopts the post-step regime)...
+        assert len(evs) == 1, (seed, evs)
+        ev = evs[0]
+        # ...naming the right probe, never the healthy one...
+        assert ev.path == "attn" and ev.stream == "drive"
+        # ...within the hysteresis-bounded window budget
+        assert 8 <= ev.window < 8 + cfg.trip_windows
+
+
+def test_ramp_fault_fires_repeatedly():
+    for seed in (0, 1, 2):
+        bus = TelemetryBus()
+        s = DriftSentinel(bus)
+        FaultDriver(bus, seed=seed,
+                    faults=[RampFault("mlp", start_window=8)]).run(24)
+        evs = s.tripped()
+        assert len(evs) >= 2, (seed, evs)          # keeps drifting → re-fires
+        assert all(e.path == "mlp" for e in evs)
+        assert evs[0].window < 8 + 4               # bounded first detection
+
+
+def test_straggler_fault_names_the_device():
+    cfg = SentinelConfig()
+    for seed in SWEEP_SEEDS:
+        bus = TelemetryBus()
+        s = DriftSentinel(bus, cfg)
+        FaultDriver(bus, seed=seed, n_devices=4,
+                    faults=[StragglerFault(device=2, at_window=8)]).run(14)
+        evs = s.tripped()
+        assert evs, seed
+        assert all(e.kind == "straggler" for e in evs), (seed, evs)
+        assert all(e.device == 2 for e in evs), (seed, evs)
+        assert min(e.window for e in evs) < 8 + cfg.trip_windows + 1
+
+
+def test_simultaneous_faults_both_detected():
+    """A straggling device and an independent global step on another
+    probe: the straggler event names the device, the step event does
+    not blame it."""
+    bus = TelemetryBus()
+    s = DriftSentinel(bus)
+    FaultDriver(bus, seed=5, n_devices=4, paths=("attn", "mlp"),
+                faults=[StragglerFault(device=1, at_window=8,
+                                       path="attn"),
+                        StepFault("mlp", at_window=8)]).run(16)
+    kinds = {(e.kind, e.path) for e in s.tripped()}
+    assert ("straggler", "attn") in kinds
+    assert any(e.path == "mlp" and e.kind != "straggler"
+               for e in s.tripped())
+    stragglers = [e for e in s.tripped() if e.kind == "straggler"]
+    assert all(e.device == 1 for e in stragglers)
+
+
+def test_min_samples_gate_never_judges_thin_windows():
+    bus = TelemetryBus()
+    s = DriftSentinel(bus, SentinelConfig(min_samples=8))
+    FaultDriver(bus, seed=0, samples_per_window=4,
+                faults=[StepFault("attn", at_window=2)]).run(20)
+    assert s.tripped() == []
+
+
+def test_sentinel_decisions_invariant_to_chunking():
+    """Publishing 1 row at a time vs whole windows at once must produce
+    identical frames and identical sentinel verdicts."""
+    def run(chunk):
+        bus = TelemetryBus()
+        s = DriftSentinel(bus)
+        d = FaultDriver(bus, seed=7, n_devices=2,
+                        faults=[StepFault("attn", at_window=6),
+                                StragglerFault(device=1, at_window=12)],
+                        chunk=chunk)
+        frames = d.run(18)
+        return frames, [(e.kind, e.path, e.device, e.window)
+                        for e in s.tripped()]
+
+    ref_frames, ref_events = run(None)
+    for chunk in (1, 7, 64):
+        frames, events = run(chunk)
+        assert events == ref_events, chunk
+        for a, b in zip(frames, ref_frames):
+            assert np.array_equal(a.counts, b.counts)
+            assert np.array_equal(a.totals, b.totals)
+            assert np.array_equal(a.hist, b.hist)
+
+
+def test_fake_clock_and_driver_determinism():
+    clock = FakeClock()
+    bus = TelemetryBus()
+    d = FaultDriver(bus, seed=3, clock=clock)
+    d.run(2)
+    assert clock.now() > 0
+    bus2 = TelemetryBus()
+    d2 = FaultDriver(bus2, seed=3)
+    d2.run(2)
+    assert np.array_equal(d.stream.agg.total, d2.stream.agg.total)
+    assert d2.clock.now() == clock.now()
+
+
+def test_report_tables_render_sentinel_state():
+    from repro.core.report import sentinel_table, telemetry_alert_table
+    bus = TelemetryBus()
+    s = DriftSentinel(bus)
+    assert "no drift events" in telemetry_alert_table([])
+    assert "no windows" in sentinel_table(s)
+    FaultDriver(bus, seed=0, n_devices=4,
+                faults=[StragglerFault(device=2, at_window=8)]).run(12)
+    tab = telemetry_alert_table(s.tripped())
+    assert "straggler" in tab and "drive" in tab
+    assert any(line.split()[4] == "2" for line in tab.splitlines()[1:])
+    st = sentinel_table(s)
+    assert "drive" in st and "event(s) fired" in st
+
+
+def test_retune_hook_fires_on_drift():
+    tuned = []
+    hook = make_retune_hook(tuned.append, background=False)
+    bus = TelemetryBus()
+    s = DriftSentinel(bus, retune=hook)
+    FaultDriver(bus, seed=1,
+                faults=[StepFault("attn", at_window=6)]).run(12)
+    assert hook.fired == len(s.tripped()) == len(tuned) == 1
+    assert tuned[0].path == "attn"
+    assert hook.last_result is None or hook.last_result == tuned[0]
+
+
+# -------------------------------------------------------- HTTP server
+
+@pytest.fixture
+def live():
+    """A bus with stream + engine + alert data behind a live server."""
+    bus = TelemetryBus()
+    sentinel = DriftSentinel(bus)
+    driver = FaultDriver(bus, seed=2, n_devices=2,
+                         faults=[StepFault("attn", at_window=6)])
+    driver.run(12)
+    bus.publish_phase("decode", cycles=500, batch=2)
+    bus.publish_request({"rid": 0, "tokens": 4})
+    with StatusServer(bus) as srv:
+        yield bus, sentinel, srv
+
+
+def test_server_binds_ephemeral_port(live):
+    bus, _, srv = live
+    assert srv.port > 0                            # OS-assigned, readable
+    doc, _ = _get_json(srv.url + "/status")
+    assert doc["schema"] == 1
+    assert doc["streams"]["drive"]["windows"] == 12
+    # two servers on one bus never collide (no hard-coded ports)
+    with StatusServer(bus) as srv2:
+        assert srv2.port != srv.port
+        assert _get_json(srv2.url + "/status")[0]["schema"] == 1
+
+
+def test_status_schema_documented_fields(live):
+    _, _, srv = live
+    doc, _ = _get_json(srv.url + "/status")
+    assert sorted(doc) == ["alerts", "engine", "schema", "streams",
+                           "uptime_s"]
+    s = doc["streams"]["drive"]
+    assert sorted(s) == ["n_devices", "n_probes", "rows_published",
+                         "samples", "total_cycles", "windows"]
+    assert sorted(doc["engine"]) == ["phases", "requests"]
+
+
+def test_json_bytes_are_key_sorted_canonical(live):
+    _, _, srv = live
+    for ep in ("/status", "/probes", "/mesh/skew", "/engine/phases",
+               "/alerts"):
+        raw = _get(srv.url + ep)
+        doc = json.loads(raw)
+        canon = (json.dumps(doc, sort_keys=True,
+                            separators=(",", ":")) + "\n").encode()
+        assert raw == canon, ep
+
+
+def test_probes_endpoint_exactly_matches_aggregator(live):
+    bus, _, srv = live
+    doc, _ = _get_json(srv.url + "/probes")
+    stream = bus.stream("drive")
+    served = doc["drive"]
+    local = stream.rows()
+    assert served == json.loads(json.dumps(local))  # float round-trip
+    agg = stream.agg
+    for row, r in enumerate(served):
+        assert r["calls"] == int(agg.count[row])
+        assert r["total_cycles"] == int(agg.total[row])
+        assert r["p99"] == agg.quantile(row, 0.99)
+        assert r["ema"] == float(agg.ema[row])      # bit-exact over HTTP
+
+
+def test_mesh_skew_endpoint(live):
+    bus, _, srv = live
+    doc, _ = _get_json(srv.url + "/mesh/skew")
+    d = doc["drive"]
+    assert d["n_devices"] == 2 and d["paths"] == ["attn", "mlp"]
+    totals = np.array(d["per_device_totals"])
+    assert totals.shape == (2, 2)
+    assert np.array_equal(totals.reshape(-1), bus.stream("drive").agg.total)
+    per_probe = totals.max(0) - totals.min(0)
+    assert d["skew"] == [int(x) for x in per_probe]
+    assert d["worst"]["device"] in (0, 1)
+
+
+def test_engine_and_alert_endpoints(live):
+    bus, sentinel, srv = live
+    eng, _ = _get_json(srv.url + "/engine/phases")
+    assert eng["phases"]["decode"] == {"steps": 1, "cycles": 500}
+    assert eng["buckets"] == {"2": 1}
+    assert eng["requests_done"] == 1
+    assert eng["recent_requests"] == [{"rid": 0, "tokens": 4}]
+    al, _ = _get_json(srv.url + "/alerts")
+    assert al["total"] == len(sentinel.tripped()) >= 1
+    ev = al["events"][0]
+    assert ev["kind"] == "hist-drift" and ev["path"] == "attn"
+    assert sorted(ev) == ["detail", "device", "kind", "path", "severity",
+                          "stream", "threshold", "window"]
+
+
+def test_metrics_prometheus_exposition(live):
+    bus, _, srv = live
+    body = _get(srv.url + "/metrics").decode()
+    assert body == render_metrics(bus)
+    assert "# TYPE repro_probe_calls_total counter" in body
+    agg = bus.stream("drive").agg
+    line = (f'repro_probe_calls_total{{device="0",path="attn",'
+            f'stream="drive"}} {int(agg.count[0])}')
+    assert line in body
+    assert f"repro_alerts_total {bus.alerts_total}" in body
+    assert "repro_engine_phase_cycles_total{phase=\"decode\"} 500" in body
+
+
+def test_unknown_endpoint_404(live):
+    _, _, srv = live
+    with pytest.raises(urllib.error.HTTPError) as e:
+        _get(srv.url + "/bogus")
+    assert e.value.code == 404
+    doc = json.loads(e.value.read())
+    assert "/mesh/skew" in doc["endpoints"]
+
+
+# ---------------------------------------------- hypothesis properties
+
+def test_property_served_aggregates_equal_one_shot():
+    """For random record streams, /probes values == a one-shot
+    StreamAggregator fed the same data (dev-only dependency)."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="dev-only dependency — pip install -r requirements-dev.txt")
+    from hypothesis import given, settings, strategies as st
+
+    chunks = st.lists(
+        st.tuples(st.integers(0, 2),
+                  st.lists(st.integers(1, 1 << 30), min_size=1,
+                           max_size=20)),
+        min_size=1, max_size=20)
+
+    @settings(max_examples=20, deadline=None)
+    @given(chunks)
+    def inner(data):
+        bus = TelemetryBus()
+        stream = bus.stream("p", ("a", "b", "c"))
+        ref = StreamAggregator(3, ema_alpha=0.1)
+        for pid, durs in data:
+            arr = np.array(durs, np.int64)
+            stream.add(pid, arr)
+            ref.add(pid, arr)
+        with StatusServer(bus) as srv:
+            doc, _ = _get_json(srv.url + "/probes")
+        for row, r in enumerate(doc["p"]):
+            assert r["calls"] == int(ref.count[row])
+            assert r["total_cycles"] == int(ref.total[row])
+            assert r["ema"] == float(ref.ema[row])
+            assert r["min"] == (int(ref.min[row]) if ref.count[row] else 0)
+            assert r["max"] == int(ref.max[row])
+            assert r["p50"] == ref.quantile(row, 0.5)
+            assert r["p99"] == ref.quantile(row, 0.99)
+
+    inner()
+
+
+def test_property_sentinel_chunking_invariance():
+    """Sentinel verdicts depend only on window deltas, never on how the
+    rows were chunked into ``add`` calls (dev-only dependency)."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="dev-only dependency — pip install -r requirements-dev.txt")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 1 << 16), st.integers(1, 64),
+           st.integers(4, 10))
+    def inner(seed, chunk, at_window):
+        def run(c):
+            bus = TelemetryBus()
+            s = DriftSentinel(bus)
+            FaultDriver(bus, seed=seed, chunk=c,
+                        faults=[StepFault("attn", at_window=at_window)]
+                        ).run(at_window + 6)
+            return [(e.kind, e.path, e.window) for e in s.tripped()]
+        assert run(None) == run(chunk)
+
+    inner()
+
+
+# ----------------------------------------- session / engine integration
+
+def _tiny_workload(x, w):
+    import jax
+    import jax.numpy as jnp
+
+    def body(c, _):
+        with jax.named_scope("layer"):
+            c = jnp.tanh(c @ w) + c
+        return c, None
+    with jax.named_scope("layers"):
+        x, _ = jax.lax.scan(body, x, None, length=3)
+    with jax.named_scope("head"):
+        return jnp.sum(x * x)
+
+
+def test_probe_session_publishes_windows_to_bus():
+    import jax.numpy as jnp
+
+    from repro.core import ProbeConfig, ProbeSession
+    bus = TelemetryBus()
+    frames = []
+    bus.subscribe("window", frames.append)
+    args = (jnp.ones((4, 8)) * 0.05, jnp.full((8, 8), 0.07))
+    cfg = ProbeConfig(inline="off_all", offload=1.0, buffer_depth=2)
+    with ProbeSession(_tiny_workload, cfg, window_steps=2, bus=bus,
+                      source="sess") as s:
+        for _ in range(6):
+            s.step(*args)
+        snap = s.snapshot()
+        s.sink.flush()
+    stream = bus.stream("sess")
+    assert stream.paths == tuple(snap.paths)
+    # the session's aggregator IS the bus stream's aggregator
+    assert stream.agg is s.sink.stats
+    assert stream.windows >= 3
+    # window deltas partition the totals exactly; exact device-counter
+    # deltas ride along and sum to the same thing
+    by_row = np.zeros(stream.n_rows, np.int64)
+    exact = np.zeros(stream.n_rows, np.int64)
+    for f in frames:
+        by_row += f.totals
+        assert f.exact_totals is not None
+        exact += f.exact_totals
+    assert np.array_equal(by_row, stream.agg.total)
+    assert np.array_equal(exact, stream.agg.total)
+    assert bus.status()["streams"]["sess"]["samples"] == \
+        int(stream.agg.count.sum())
+
+
+def test_mesh_session_publishes_device_major_stream(tiny_mesh):
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import MeshProbeSession, ProbeConfig, mesh_probe
+    bus = TelemetryBus()
+    x = jnp.arange(8.0).reshape(2, 4) * 0.01
+    w = jnp.full((4, 4), 0.25)
+    with MeshProbeSession(
+            mesh_probe(_tiny_workload, tiny_mesh, (P("dev"), P()), P(),
+                       ProbeConfig(inline="off_all")),
+            window_steps=2, bus=bus, source="mesh") as s:
+        for _ in range(4):
+            s.step(x, w)
+        snap = s.snapshot()
+    stream = bus.stream("mesh")
+    assert stream.n_devices == snap.record.n_devices == 1
+    assert stream.windows == 2
+    assert np.array_equal(stream.agg.total.reshape(1, -1),
+                          snap.record.totals)
+
+
+# ------------------------------------------------- end-to-end (slow)
+
+@pytest.mark.slow
+def test_e2e_live_decode_with_status_server(tiny_model):
+    """A probed decode loop on the tiny model with the status server
+    attached: endpoints stay live and schema-stable mid-decode, served
+    aggregates equal the in-process ones, and the decoded tokens are
+    bit-identical to the unprobed reference."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ShapeConfig
+    from repro.core import ProbeConfig, ProbeSession
+    from repro.distributed.steps import build_decode_step, build_prefill_step
+    cfg, model, params = tiny_model
+    batch, prompt_len, max_new, cache_len = 2, 16, 6, 32
+    key = jax.random.PRNGKey(1)
+    tokens = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
+    prefill = jax.jit(build_prefill_step(
+        model, ShapeConfig("pf", cache_len, batch, "prefill")))
+
+    def decode_loop(decode, on_step=None):
+        logits, cache = prefill(params, {"tokens": tokens})
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out = [np.asarray(next_tok)]
+        for i in range(max_new - 1):
+            dbatch = {"tokens": next_tok[:, None],
+                      "pos": jnp.int32(prompt_len + i)}
+            logits, cache, next_tok = decode(params, cache, dbatch)
+            out.append(np.asarray(next_tok))
+            if on_step is not None:
+                on_step(i)
+        return np.stack(out, axis=1)
+
+    bus = TelemetryBus()
+    sentinel = DriftSentinel(bus)
+    polled = []
+    with StatusServer(bus) as srv:
+        def poll(i):
+            if i == 2:                              # mid-decode, live
+                polled.append(_get_json(srv.url + "/status"))
+                polled.append((None, _get(srv.url + "/metrics")))
+        with ProbeSession(build_decode_step(model),
+                          ProbeConfig(offload=1.0, max_probes=16),
+                          window_steps=2, bus=bus,
+                          source="serve/decode") as s:
+            got = decode_loop(s.step, poll)
+            snap = s.snapshot()
+        doc, _ = _get_json(srv.url + "/probes")
+        status, _ = _get_json(srv.url + "/status")
+        metrics = _get(srv.url + "/metrics").decode()
+    assert sentinel.tripped() == []                 # healthy run: silent
+
+    # bit-identity with the server attached
+    ref = decode_loop(jax.jit(build_decode_step(model)))
+    assert np.array_equal(got, ref)
+
+    # mid-decode polls parsed and carried the documented schema
+    assert polled and sorted(polled[0][0]) == [
+        "alerts", "engine", "schema", "streams", "uptime_s"]
+    assert b"repro_probe_calls_total" in polled[1][1]
+
+    # served aggregates == the in-process stream aggregator, exactly
+    # (JSON round-trip included); the session snapshot may lead by the
+    # ring remainder (< buffer_depth rows not yet spilled at the poll)
+    stream = bus.stream("serve/decode")
+    assert stream.agg is s.sink.stats
+    assert doc["serve/decode"] == json.loads(json.dumps(stream.rows()))
+    depth = ProbeConfig().buffer_depth
+    served = {r["path"]: r for r in doc["serve/decode"]}
+    for row in snap.rows:
+        if not row.calls:
+            continue
+        r = served[row.path]
+        assert 0 <= row.calls - r["calls"] < depth, row.path
+        assert r["total_cycles"] <= row.total_cycles, row.path
+        if r["calls"]:
+            assert row.min <= r["min"] <= r["max"] <= row.max, row.path
+    assert status["streams"]["serve/decode"]["windows"] >= 2
+    assert 'stream="serve/decode"' in metrics
