@@ -1,0 +1,66 @@
+"""Sweep farm (trace-once cycle simulator at scale): a 1000+-candidate
+flash-attention config x shape pool is captured once as ``KernelTrace``
+artifacts by worker processes, priced through the simulator in
+microseconds per config, and only the per-shape finalists (<=32 across
+the whole sweep) ever touch the device.
+
+Deterministic rows (``sweep_configs=``, ``device_measurements=``,
+``cycles=``, ``speedup_x1000=``) gate the funnel shape and the
+model-clock outcomes exactly; ``sim_us_per_config`` is wall-clock-ish
+and gates against a generous budget baseline.
+"""
+import tempfile
+
+from benchmarks.common import emit
+from repro.core import EvalCache
+from repro.core.dse import run_sweep
+
+SHAPES = [{"S": s, "H": h, "D": 32}
+          for s in (128, 256, 512, 1024) for h in (2, 4, 8)]
+
+
+def run():
+    cache = EvalCache(tempfile.mkdtemp(prefix="bench_sweep_"))
+    res = run_sweep("flash_attention", SHAPES, workers=4, top_k=24,
+                    steps=2, cache=cache, calibrate=False)
+
+    emit("sweep/funnel", res.wall_s * 1e6,
+         f"sweep_configs={res.n_candidates};captured={res.n_captured};"
+         f"pruned={res.n_pruned};finalists={res.n_finalists};"
+         f"device_measurements={res.n_measured}")
+    emit("sweep/simulate", res.sim_wall_s * 1e6,
+         f"sim_us_per_config={res.sim_us_per_config:.1f};"
+         f"priced={res.n_priced}")
+    emit("sweep/capture", res.price_wall_s * 1e6,
+         f"workers={res.workers}")
+    emit("sweep/measure", res.measure_wall_s * 1e6,
+         f"device_measurements={res.n_measured}")
+    for sh in res.shapes:
+        tag = "x".join(str(v) for _, v in sorted(sh.shape.items()))
+        cfg = ",".join(f"{k}={v}" for k, v in sorted(sh.best_config.items()))
+        emit(f"sweep/shape/{tag}", 0.0,
+             f"cycles={sh.best_cycles:.0f};default={sh.default_cycles:.0f};"
+             f"speedup_x1000={sh.speedup * 1000:.0f};config={cfg}")
+
+    assert res.n_candidates >= 1000, \
+        f"sweep pool shrank to {res.n_candidates} candidates"
+    assert res.n_measured <= 32, \
+        f"{res.n_measured} device measurements; the funnel must keep <=32"
+    for sh in res.shapes:
+        assert sh.best_cycles <= sh.default_cycles, \
+            f"sweep winner lost to the default at {sh.shape}"
+
+    # warm rerun: artifacts + eval cache make the whole sweep device-free
+    res2 = run_sweep("flash_attention", SHAPES, workers=4, top_k=24,
+                     steps=2, cache=EvalCache(cache.root), calibrate=False)
+    emit("sweep/warm", res2.wall_s * 1e6,
+         f"device_measurements={res2.n_measured};captured={res2.n_captured};"
+         f"cache_hits={res2.n_cache_hits}")
+    assert res2.n_measured == 0 and res2.n_captured == 0, \
+        "warm sweep re-did work despite unchanged kernels/configs"
+    assert [s.best_config for s in res2.shapes] == \
+        [s.best_config for s in res.shapes]
+
+
+if __name__ == "__main__":
+    run()

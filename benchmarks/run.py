@@ -47,7 +47,8 @@ def main() -> None:
                             bench_dse, bench_engine, bench_incremental,
                             bench_instrument, bench_latency_impact,
                             bench_offload, bench_overhead, bench_roofline,
-                            bench_streaming, bench_telemetry, common)
+                            bench_streaming, bench_sweep, bench_telemetry,
+                            common)
     benches = [
         ("Table II  (cycle accuracy, 28 designs)", bench_accuracy),
         ("Conformance (graphs verified / second)", bench_conformance),
@@ -57,6 +58,7 @@ def main() -> None:
         ("Table III (latency/Fmax impact)", bench_latency_impact),
         ("Fig 12    (DRAM dump ratio)", bench_offload),
         ("Fig 13    (DSE Pareto + kernel autotune)", bench_dse),
+        ("Sweep farm (trace-once simulator at scale)", bench_sweep),
         ("Fig 1/14 + Table IV (discrepancies)", bench_discrepancy),
         ("Streaming (ProbeSession per-step overhead)", bench_streaming),
         ("Engine    (paged continuous-batching serving)", bench_engine),

@@ -21,11 +21,14 @@ from repro.core.oracle import KernelOracle, Oracle
 from repro.core.report import (Report, bump_chart, kernel_grid_heat,
                                kernel_grid_table, streaming_bump_chart,
                                streaming_table)
-from repro.core.dse import (run_dse, DSEResult, DSEEngine, SearchSpace,
-                            Trial, TuneResult)
+from repro.core.dse import (run_dse, run_sweep, DSEResult, DSEEngine,
+                            SearchSpace, SweepResult, Trial, TuneResult)
 from repro.core.costmodel import DeviceBudget, KernelResources
 from repro.core.incremental import (measure_incremental, EvalCache,
-                                    device_kind, lowered_fingerprint)
+                                    FileLock, device_kind,
+                                    lowered_fingerprint)
+from repro.core.tracesim import (KernelTrace, TraceEntry, TraceStore,
+                                 capture, capture_entry, price)
 from repro.core.overhead import OverheadModel, measure_overhead, adapt_allocation
 from repro.core.streaming import (ProbeSession, StreamAggregator,
                                   StreamingSink, StreamSnapshot)
@@ -49,4 +52,7 @@ __all__ = [
     "CycleRecord", "ShardOracle", "decode_mesh_record",
     # intra-kernel grid-step probing (ProbeConfig.kernel_probes)
     "KernelOracle", "kernel_grid_table", "kernel_grid_heat",
+    # trace-once cycle simulator + sweep farm
+    "KernelTrace", "TraceEntry", "TraceStore", "capture", "capture_entry",
+    "price", "run_sweep", "SweepResult", "FileLock",
 ]

@@ -74,21 +74,56 @@ def current_axis_sizes() -> Optional[Dict[str, int]]:
     return _AXIS_SIZES.get()
 
 
-def _collective_comm_bytes(eqn, in_bytes: int, out_bytes: int) -> int:
-    """Comm bytes of a collective eqn: ring wire model when mesh axis
-    sizes are in context, legacy operand-bytes fallback otherwise."""
+def collective_comm_bytes(name: str, axes: Tuple[str, ...],
+                          in_bytes: int, out_bytes: int) -> int:
+    """Comm bytes of one collective execution under the CURRENT axis-
+    size context: ring wire model when mesh axis sizes are in context,
+    legacy operand-bytes fallback otherwise. Decomposed (primitive name
+    + mesh axes, not a live eqn) so captured trace artifacts can
+    re-price collectives for a different mesh without re-tracing."""
     sizes = _AXIS_SIZES.get()
     if sizes is None:
         return in_bytes
-    from repro.launch.collectives import (PRIMITIVE_KINDS, collective_axes,
-                                          ring_wire_bytes)
-    kind = PRIMITIVE_KINDS.get(eqn.primitive.name)
+    from repro.launch.collectives import PRIMITIVE_KINDS, ring_wire_bytes
+    kind = PRIMITIVE_KINDS.get(name)
     if kind is None:
         return in_bytes
     g = 1
-    for a in collective_axes(eqn):
+    for a in axes:
         g *= int(sizes.get(a, 1))
     return int(math.ceil(ring_wire_bytes(kind, out_bytes, g)))
+
+
+def collective_eqn_axes(eqn) -> Tuple[str, ...]:
+    """Named mesh axes a collective eqn reduces/permutes over."""
+    from repro.launch.collectives import collective_axes
+    return tuple(str(a) for a in collective_axes(eqn))
+
+
+def _collective_comm_bytes(eqn, in_bytes: int, out_bytes: int) -> int:
+    if _AXIS_SIZES.get() is None:
+        return in_bytes
+    return collective_comm_bytes(eqn.primitive.name,
+                                 collective_eqn_axes(eqn),
+                                 in_bytes, out_bytes)
+
+
+def roofline_cycles(flops: int, total_bytes: int, comm_bytes: int) -> int:
+    """The model's single cycle formula: the max of the compute, memory
+    and interconnect terms, never below one cycle."""
+    return max(1, int(math.ceil(max(flops / FLOPS_PER_CYCLE,
+                                    total_bytes / HBM_BYTES_PER_CYCLE,
+                                    comm_bytes / ICI_BYTES_PER_CYCLE))))
+
+
+def collective_cycles(name: str, axes: Tuple[str, ...], *, flops: int,
+                      in_bytes: int, out_bytes: int) -> int:
+    """Cycles of one collective execution under the current
+    ``collective_axis_sizes`` context — the re-pricing seam used by
+    ``tracesim`` (identical arithmetic to ``eqn_cost``'s collective
+    branch)."""
+    comm = collective_comm_bytes(name, axes, in_bytes, out_bytes)
+    return roofline_cycles(flops, in_bytes + out_bytes, comm)
 
 
 def _aval_bytes(aval) -> int:
@@ -196,6 +231,21 @@ def _pallas_grid_steps(eqn) -> int:
     return max(steps, 1)
 
 
+def flat_pallas_cycles(kernel: str, body_cycles: int, dma_cycles: int,
+                       steps: int) -> int:
+    """Flat cycles of a whole ``pallas_call`` from its decomposed terms:
+    per-step body cycles (scaled by the installed calibration for this
+    kernel body name) plus the per-step block DMA, times the grid size.
+    The single definition shared by ``_pallas_cost`` (live pricing) and
+    ``tracesim.price`` (artifact re-pricing) — the two must never
+    drift, or calibrated sweep filtering would rank candidates by a
+    different clock than the one the finalists are measured on."""
+    scale = kernel_calibration(kernel)
+    if scale != 1.0:
+        body_cycles = max(1, int(round(body_cycles * scale)))
+    return steps * max(1, body_cycles + dma_cycles)
+
+
 def _pallas_cost(eqn) -> EqnCost:
     """Cost of a ``pallas_call``: per-grid-step kernel-body cycles (the
     body jaxpr's avals are BLOCK-shaped, so tile/pipeline choices change
@@ -205,16 +255,14 @@ def _pallas_cost(eqn) -> EqnCost:
     body = _as_jaxpr(eqn.params["jaxpr"])
     steps = _pallas_grid_steps(eqn)
     body_cycles = static_jaxpr_cycles(body)
-    scale = kernel_calibration(pallas_kernel_name(eqn))
-    if scale != 1.0:
-        body_cycles = max(1, int(round(body_cycles * scale)))
     flops, bytes_ = jaxpr_flat_flops_bytes(body)
     # block DMA per grid step: every kernel operand ref (input blocks,
     # output blocks, scratch) is VMEM-resident; HBM-backed blocks move
     # across the memory system once per step
     block_bytes = sum(_aval_bytes(v.aval) for v in body.invars)
     dma_cycles = pallas_dma_cycles(eqn)
-    cycles = steps * max(1, body_cycles + dma_cycles)
+    cycles = flat_pallas_cycles(pallas_kernel_name(eqn), body_cycles,
+                                dma_cycles, steps)
     return EqnCost(flops=steps * flops,
                    bytes=steps * (bytes_ + block_bytes),
                    comm_bytes=0, cycles=cycles)
@@ -262,9 +310,7 @@ def eqn_cost(eqn) -> EqnCost:
     else:
         # generic elementwise fallback
         flops = max((_aval_size(v.aval) for v in eqn.outvars), default=0)
-    cycles = max(1, int(math.ceil(max(flops / FLOPS_PER_CYCLE,
-                                      total_bytes / HBM_BYTES_PER_CYCLE,
-                                      comm / ICI_BYTES_PER_CYCLE))))
+    cycles = roofline_cycles(int(flops), total_bytes, comm)
     return EqnCost(flops=int(flops), bytes=int(total_bytes),
                    comm_bytes=int(comm), cycles=cycles)
 

@@ -551,3 +551,339 @@ class DSEEngine:
             n_cache_hits=self.n_cache_hits,
             measured_steps=self.measured_steps,
             wall_s=time.perf_counter() - t0, device=self.device)
+
+
+# ===================================================================
+# Trace-once sweep farm (simulator-first, multi-process, shared cache)
+# ===================================================================
+#
+# Successive halving measures tens of candidates; the sweep farm covers
+# thousands. The phases:
+#
+#   1. capture  — workers trace each missing (config, shape) once and
+#                 merge the KernelTrace artifacts into the shared
+#                 TraceStore (no device execution);
+#   2. calibrate — one kernel-probed device run on the first shape
+#                 installs the measured/static body ratio
+#                 (``DSEEngine.measure_tiles`` + ``calibrate``), which
+#                 transfers to every other shape through the artifacts;
+#   3. simulate — the parent re-prices EVERY candidate from the
+#                 artifacts in microseconds (flat mode: the same clock
+#                 device measurement produces), prunes against the
+#                 budget, and ranks;
+#   4. measure  — only the per-shape finalists (default + top priced)
+#                 run on the device, in workers sharing one EvalCache.
+#
+# Workers run in *spawned* processes: tasks carry only plain data,
+# spaces are rebuilt by name via ``search_spaces.sweep_space`` (bind
+# closures don't pickle), and the installed calibration state is
+# re-applied inside the worker.
+
+@dataclass
+class SweepShapeOutcome:
+    shape: Dict[str, Any]
+    n_candidates: int
+    n_pruned: int
+    best_config: Optional[Dict[str, Any]] = None
+    best_cycles: Optional[float] = None
+    default_config: Optional[Dict[str, Any]] = None
+    default_cycles: Optional[float] = None
+
+    @property
+    def speedup(self) -> float:
+        if not self.best_cycles or not self.default_cycles:
+            return 1.0
+        return self.default_cycles / max(self.best_cycles, 1e-12)
+
+
+@dataclass
+class SweepResult:
+    kernel_id: str
+    device: str
+    shapes: List[SweepShapeOutcome]
+    n_candidates: int             # configs x shapes enumerated
+    n_captured: int               # traces captured this run (rest reused)
+    n_pruned: int
+    n_priced: int                 # simulator-priced candidates
+    n_finalists: int
+    n_measured: int               # ProbeSession device runs performed
+    n_cache_hits: int
+    n_calibration_runs: int
+    calibration_scale: Optional[float]
+    workers: int
+    top_k: int
+    price_wall_s: float           # capture phase
+    sim_wall_s: float             # pure artifact re-pricing
+    measure_wall_s: float
+    wall_s: float
+
+    @property
+    def sim_us_per_config(self) -> float:
+        return 1e6 * self.sim_wall_s / max(self.n_candidates, 1)
+
+    def summary(self) -> str:
+        lines = [
+            f"sweep {self.kernel_id} on {self.device}: "
+            f"{self.n_candidates} candidates over {len(self.shapes)} "
+            f"shapes, {self.n_pruned} pruned, {self.n_finalists} "
+            f"finalists, {self.n_measured} device measurements "
+            f"({self.n_cache_hits} cache hits)",
+            f"  capture {self.price_wall_s:.2f}s "
+            f"({self.n_captured} traced, rest reused) | simulate "
+            f"{self.sim_wall_s * 1e3:.1f}ms "
+            f"({self.sim_us_per_config:.1f}us/config) | measure "
+            f"{self.measure_wall_s:.2f}s",
+        ]
+        if self.calibration_scale is not None:
+            lines.append(f"  calibration scale {self.calibration_scale:.4f} "
+                         f"(transferred to all shapes)")
+        for o in self.shapes:
+            lines.append(
+                f"  {o.shape}: best {o.best_config} "
+                f"{o.best_cycles if o.best_cycles is not None else float('nan'):.0f} cyc/step, "
+                f"{o.speedup:.2f}x vs default")
+        return "\n".join(lines)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "kernel": self.kernel_id, "device": self.device,
+            "n_candidates": self.n_candidates,
+            "n_captured": self.n_captured, "n_pruned": self.n_pruned,
+            "n_priced": self.n_priced, "n_finalists": self.n_finalists,
+            "n_measured": self.n_measured,
+            "n_cache_hits": self.n_cache_hits,
+            "n_calibration_runs": self.n_calibration_runs,
+            "calibration_scale": self.calibration_scale,
+            "workers": self.workers, "top_k": self.top_k,
+            "sim_us_per_config": round(self.sim_us_per_config, 3),
+            "shapes": [{
+                "shape": o.shape, "n_candidates": o.n_candidates,
+                "n_pruned": o.n_pruned, "best": o.best_config,
+                "best_cycles": o.best_cycles, "default": o.default_config,
+                "default_cycles": o.default_cycles,
+                "speedup": round(o.speedup, 4)} for o in self.shapes],
+        }
+
+
+def _sweep_worker(task: Dict[str, Any]) -> Dict[str, Any]:
+    """One farm work unit; must stay module-level and take/return plain
+    data only (it crosses the spawn pickle boundary)."""
+    from repro.core import costmodel as _cm
+    from repro.core import tracesim as _ts
+    from repro.kernels import search_spaces as _ss
+
+    _cm.clear_kernel_calibration()
+    for kname, scale in task.get("calibration", ()):
+        _cm.set_kernel_calibration(kname, float(scale))
+    space = _ss.sweep_space(task["kernel"], **task["shape"])
+    out: Dict[str, Any] = {"shape_idx": task["shape_idx"], "rows": [],
+                           "measurements": 0, "cache_hits": 0}
+    if task["phase"] == "capture":
+        trace = _ts.KernelTrace(kernel_id=space.kernel_id,
+                                shape=_ts.shape_signature(space.args),
+                                space_fingerprint=task["space_fp"])
+        for cfg in task["configs"]:
+            trace.entries[_ts.config_key(cfg)] = _ts.capture_entry(
+                space, cfg, walk=task.get("walk", False))
+        _ts.TraceStore(task["cache_dir"]).merge(trace)
+        out["captured"] = len(task["configs"])
+        return out
+    # phase == "measure": probed device runs through the shared cache
+    engine = DSEEngine(space, budget=None,
+                       cache=EvalCache(task["cache_dir"]),
+                       cycle_source=task.get("cycle_source", "model"),
+                       r0=task["steps"], max_steps=task["steps"])
+    for cfg in task["configs"]:
+        t = engine.analyze(cfg)
+        cps = engine.evaluate(t, task["steps"])
+        out["rows"].append({"config": cfg, "cycles": float(cps),
+                            "steps": int(t.steps)})
+    out["measurements"] = engine.n_measurements
+    out["cache_hits"] = engine.n_cache_hits
+    return out
+
+
+def _run_tasks(tasks: List[Dict[str, Any]], workers: int) -> List[Dict]:
+    if workers > 1 and len(tasks) > 1:
+        import multiprocessing as mp
+        from concurrent.futures import ProcessPoolExecutor
+        ctx = mp.get_context("spawn")
+        with ProcessPoolExecutor(max_workers=workers,
+                                 mp_context=ctx) as ex:
+            return list(ex.map(_sweep_worker, tasks))
+    return [_sweep_worker(t) for t in tasks]
+
+
+def _chunked(seq: List[Any], size: int) -> List[List[Any]]:
+    return [seq[i:i + size] for i in range(0, len(seq), max(size, 1))]
+
+
+def run_sweep(kernel_id: str,
+              shapes: Optional[Sequence[Dict[str, Any]]] = None, *,
+              workers: int = 2, top_k: int = 16, steps: int = 4,
+              budget: Optional[DeviceBudget] = DeviceBudget(),
+              cache: Optional[EvalCache] = None,
+              cache_dir: Optional[str] = None,
+              calibrate: bool = False, walk: bool = False,
+              chunk: int = 64, cycle_source: str = "model",
+              reuse_traces: bool = True) -> SweepResult:
+    """Simulator-first DSE over configs x shapes (see the phase map
+    above). Device measurement is reserved for at most
+    ``max(2, top_k // n_shapes)`` finalists per shape — the default
+    config plus the top simulator-priced survivors — no matter how many
+    candidates the sweep enumerates."""
+    from repro.core import costmodel as _cm
+    from repro.core import tracesim as ts
+    from repro.kernels import search_spaces as ss
+
+    t_start = time.perf_counter()
+    shape_list = [dict(s) for s in
+                  (shapes if shapes is not None
+                   else ss.sweep_shapes(kernel_id))]
+    cache = cache if cache is not None else EvalCache(cache_dir)
+    store = ts.TraceStore(cache.root)
+    device = device_kind()
+
+    spaces = [ss.sweep_space(kernel_id, **sh) for sh in shape_list]
+    space_fps = [ts.space_fingerprint(sp) for sp in spaces]
+    shape_sigs = [ts.shape_signature(sp.args) for sp in spaces]
+    cand_lists = [sp.candidates() for sp in spaces]
+    for sp, cands in zip(spaces, cand_lists):
+        if sp.default not in cands:
+            cands.append(sp.default)
+    n_candidates = sum(len(c) for c in cand_lists)
+
+    # -- phase 1: capture missing traces (workers, no device) ----------
+    t0 = time.perf_counter()
+    tasks = []
+    for i, (sh, sig, sfp, cands) in enumerate(
+            zip(shape_list, shape_sigs, space_fps, cand_lists)):
+        stored = (store.load(kernel_id, sig, sfp)
+                  if reuse_traces else None)
+        have = set(stored.entries) if stored is not None else set()
+        missing = [c for c in cands if ts.config_key(c) not in have]
+        for part in _chunked(missing, chunk):
+            tasks.append({"phase": "capture", "kernel": kernel_id,
+                          "shape": sh, "shape_idx": i, "configs": part,
+                          "walk": walk, "cache_dir": cache.root,
+                          "space_fp": sfp, "calibration": ()})
+    n_captured = sum(r.get("captured", 0)
+                     for r in _run_tasks(tasks, workers))
+    price_wall = time.perf_counter() - t0
+    traces = [store.load(kernel_id, sig, sfp)
+              for sig, sfp in zip(shape_sigs, space_fps)]
+    for i, tr in enumerate(traces):
+        if tr is None:
+            raise RuntimeError(
+                f"sweep capture produced no trace for shape "
+                f"{shape_list[i]} (store {store.root})")
+
+    # -- phase 2: one calibration run, transferred to every shape ------
+    scale = None
+    calib_runs = 0
+    if calibrate:
+        sp0, tr0 = spaces[0], traces[0]
+        # calibrate on the unpruned candidate with the MOST grid steps:
+        # fine tiles see the most pl.when causal-skip structure, which
+        # is exactly the signal the flat estimate cannot price
+        pick = min(
+            (c for c in cand_lists[0]
+             if budget is None or not budget.violations(
+                 ts.entry_resources(tr0.entries[ts.config_key(c)]))),
+            key=lambda c: (-tr0.entries[ts.config_key(c)].grid_steps,
+                           ts.price(tr0, c, mode="flat"),
+                           ts.config_key(c)),
+            default=sp0.default)
+        engine = DSEEngine(sp0, budget=None, cache=cache,
+                           cycle_source=cycle_source, r0=steps,
+                           max_steps=steps)
+        trial = engine.analyze(pick)
+        engine.measure_tiles(trial)
+        calib_runs = 1
+        scale = engine.calibrate([trial])
+
+    # -- phase 3: simulate every candidate from the artifacts ----------
+    t0 = time.perf_counter()
+    ranked: List[List[Tuple[int, Dict[str, Any]]]] = []
+    outcomes: List[SweepShapeOutcome] = []
+    n_pruned = n_priced = 0
+    for sh, sp, tr, cands in zip(shape_list, spaces, traces, cand_lists):
+        rows = []
+        pruned_here = 0
+        for cfg in cands:
+            entry = tr.entries[ts.config_key(cfg)]
+            if budget is not None and budget.violations(
+                    ts.entry_resources(entry)):
+                pruned_here += 1
+                continue
+            rows.append((ts.price(entry, mode="flat"), cfg))
+        rows.sort(key=lambda rc: (rc[0], ts.config_key(rc[1])))
+        ranked.append(rows)
+        n_pruned += pruned_here
+        n_priced += len(rows)
+        outcomes.append(SweepShapeOutcome(
+            shape=sh, n_candidates=len(cands), n_pruned=pruned_here,
+            default_config=dict(sp.default)))
+    sim_wall = time.perf_counter() - t0
+
+    # -- phase 4: measure only the finalists (workers, shared cache) ---
+    per_shape = max(2, top_k // max(len(shape_list), 1))
+    t0 = time.perf_counter()
+    tasks = []
+    finalists_per_shape: List[List[Dict[str, Any]]] = []
+    calib_state = [(k, v) for k, v in _cm.kernel_calibration_state()]
+    for i, (sp, rows) in enumerate(zip(spaces, ranked)):
+        finalists = [dict(sp.default)]
+        for _, cfg in rows:
+            if len(finalists) >= per_shape:
+                break
+            if cfg != sp.default:
+                finalists.append(cfg)
+        finalists_per_shape.append(finalists)
+        # split each shape's finalists across (up to) two tasks so
+        # concurrent workers genuinely interleave on the shared cache
+        parts = (_chunked(finalists, max(1, (len(finalists) + 1) // 2))
+                 if workers > 1 else [finalists])
+        for part in parts:
+            tasks.append({"phase": "measure", "kernel": kernel_id,
+                          "shape": shape_list[i], "shape_idx": i,
+                          "configs": part, "steps": steps,
+                          "cache_dir": cache.root,
+                          "cycle_source": cycle_source,
+                          "calibration": calib_state})
+    n_measured = n_cache_hits = 0
+    measured: List[Dict[str, List]] = [{"rows": []} for _ in shape_list]
+    for res in _run_tasks(tasks, workers):
+        n_measured += res["measurements"]
+        n_cache_hits += res["cache_hits"]
+        measured[res["shape_idx"]]["rows"].extend(res["rows"])
+    measure_wall = time.perf_counter() - t0
+
+    for i, (sp, o) in enumerate(zip(spaces, outcomes)):
+        rows = measured[i]["rows"]
+        if not rows:
+            continue
+        best = min(rows, key=lambda r: (r["cycles"],
+                                        ts.config_key(r["config"])))
+        o.best_config, o.best_cycles = dict(best["config"]), best["cycles"]
+        for r in rows:
+            if r["config"] == sp.default:
+                o.default_cycles = r["cycles"]
+                break
+    # the primary (first) shape declares the kernel@device winner
+    o0 = outcomes[0]
+    if o0.best_config is not None and o0.best_cycles is not None:
+        cache.set_winner(kernel_id, device, o0.best_config,
+                         cycles_per_step=o0.best_cycles,
+                         shape=shape_sigs[0])
+
+    return SweepResult(
+        kernel_id=kernel_id, device=device, shapes=outcomes,
+        n_candidates=n_candidates, n_captured=n_captured,
+        n_pruned=n_pruned, n_priced=n_priced,
+        n_finalists=sum(len(f) for f in finalists_per_shape),
+        n_measured=n_measured, n_cache_hits=n_cache_hits,
+        n_calibration_runs=calib_runs, calibration_scale=scale,
+        workers=workers, top_k=top_k, price_wall_s=price_wall,
+        sim_wall_s=sim_wall, measure_wall_s=measure_wall,
+        wall_s=time.perf_counter() - t_start)

@@ -23,11 +23,114 @@ import json
 import os
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional, Sequence
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 
 from repro.core.pragma import ProbeConfig, probe
+
+try:
+    import fcntl
+except ImportError:                       # non-POSIX: O_EXCL spin fallback
+    fcntl = None
+
+
+class FileLock:
+    """Advisory inter-process lock guarding read-merge-write saves.
+
+    ``flock`` on a sidecar ``.lock`` file where available (released
+    automatically by the OS if the holder dies), an ``O_EXCL``
+    create-spin elsewhere. Sweep-farm workers and concurrent tuner
+    processes all mutate the same cache files; every mutation must
+    happen under this lock or a whole-file rewrite from a stale
+    snapshot silently drops the other writers' entries.
+    """
+
+    def __init__(self, path: str, *, timeout: float = 30.0,
+                 poll: float = 0.005):
+        self.path = path
+        self.timeout = timeout
+        self.poll = poll
+        self._fd: Optional[int] = None
+        self._excl = False
+
+    def acquire(self) -> "FileLock":
+        parent = os.path.dirname(self.path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        deadline = time.monotonic() + self.timeout
+        if fcntl is not None:
+            self._fd = os.open(self.path, os.O_CREAT | os.O_RDWR, 0o644)
+            while True:
+                try:
+                    fcntl.flock(self._fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+                    return self
+                except OSError:
+                    if time.monotonic() >= deadline:
+                        os.close(self._fd)
+                        self._fd = None
+                        raise TimeoutError(
+                            f"could not acquire lock {self.path} within "
+                            f"{self.timeout:g}s")
+                    time.sleep(self.poll)
+        while True:
+            try:
+                self._fd = os.open(self.path,
+                                   os.O_CREAT | os.O_EXCL | os.O_RDWR, 0o644)
+                self._excl = True
+                return self
+            except FileExistsError:
+                if time.monotonic() >= deadline:
+                    raise TimeoutError(
+                        f"could not acquire lock {self.path} within "
+                        f"{self.timeout:g}s")
+                time.sleep(self.poll)
+
+    def release(self) -> None:
+        if self._fd is None:
+            return
+        try:
+            if fcntl is not None and not self._excl:
+                fcntl.flock(self._fd, fcntl.LOCK_UN)
+            os.close(self._fd)
+        finally:
+            self._fd = None
+            if self._excl:
+                self._excl = False
+                try:
+                    os.unlink(self.path)
+                except OSError:
+                    pass
+
+    def __enter__(self) -> "FileLock":
+        return self.acquire()
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+def _file_stamp(path: str) -> Optional[Tuple[int, int, int]]:
+    """Freshness stamp of an on-disk JSON file (None when absent)."""
+    try:
+        st = os.stat(path)
+    except OSError:
+        return None
+    return (st.st_mtime_ns, st.st_size, st.st_ino)
+
+
+def _read_json(path: str) -> Dict[str, Any]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def _write_json(path: str, data: Dict[str, Any]) -> None:
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
 
 
 @dataclass
@@ -82,6 +185,12 @@ class EvalCache:
     far: ``{config, cycles_per_step, steps, ...}``. A lookup hits only
     when the cached run covered at least as many steps as requested, so
     successive-halving finalists are always backed by long-enough runs.
+
+    Safe to share across processes: every mutation is a read-merge-write
+    of the on-disk file under a :class:`FileLock` (concurrent writers
+    merge instead of clobbering each other), a ``put`` never replaces an
+    entry backed by a longer run, and reads reload whenever the file
+    changed on disk.
     """
 
     def __init__(self, cache_dir: Optional[str] = None):
@@ -92,23 +201,30 @@ class EvalCache:
         self.winners_path = os.path.join(self.root, "winners.json")
         self._data: Optional[Dict[str, Dict[str, Any]]] = None
         self._winners: Optional[Dict[str, Dict[str, Any]]] = None
+        self._stamp: Optional[Tuple[int, int, int]] = None
+        self._winners_stamp: Optional[Tuple[int, int, int]] = None
 
     # -- storage -------------------------------------------------------
     def _load(self) -> Dict[str, Dict[str, Any]]:
-        if self._data is None:
-            try:
-                with open(self.path) as f:
-                    self._data = json.load(f)
-            except (OSError, ValueError):
-                self._data = {}
+        stamp = _file_stamp(self.path)
+        if self._data is None or stamp != self._stamp:
+            self._data = _read_json(self.path)
+            self._stamp = stamp
         return self._data
 
-    def _save(self) -> None:
+    def _mutate(self, path: str,
+                mutator: Callable[[Dict[str, Any]], None]
+                ) -> Tuple[Dict[str, Any], Optional[Tuple[int, int, int]]]:
+        """Locked read-merge-write: re-read the CURRENT on-disk state,
+        apply ``mutator`` to it, atomically write it back. Other
+        processes' entries written since our last load survive."""
         os.makedirs(self.root, exist_ok=True)
-        tmp = self.path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(self._load(), f, indent=1, sort_keys=True)
-        os.replace(tmp, self.path)
+        with FileLock(path + ".lock"):
+            data = _read_json(path)
+            mutator(data)
+            _write_json(path, data)
+            stamp = _file_stamp(path)
+        return data, stamp
 
     @staticmethod
     def entry_key(kernel_id: str, config: Dict[str, Any],
@@ -131,14 +247,28 @@ class EvalCache:
         return None
 
     def put(self, kernel_id: str, config: Dict[str, Any], fingerprint: str,
-            device: str, *, cycles_per_step: float, steps: int) -> None:
-        data = self._load()
-        data[self.entry_key(kernel_id, config, fingerprint, device)] = {
+            device: str, *, cycles_per_step: float,
+            steps: int) -> Dict[str, Any]:
+        """Record a measurement; returns the entry now stored under the
+        key. "Best measurement so far" means an entry is only replaced
+        by a run of at least as many steps — a short re-measure (an
+        ``r0``-step halving rung) can never downgrade a cached long-run
+        finalist measurement."""
+        key = self.entry_key(kernel_id, config, fingerprint, device)
+        entry = {
             "kernel": kernel_id, "config": dict(config),
             "fingerprint": fingerprint, "device": device,
             "cycles_per_step": float(cycles_per_step), "steps": int(steps),
         }
-        self._save()
+
+        def merge(data: Dict[str, Any]) -> None:
+            cur = data.get(key)
+            if cur is not None and int(cur.get("steps", 0)) > int(steps):
+                return
+            data[key] = entry
+
+        self._data, self._stamp = self._mutate(self.path, merge)
+        return dict(self._data[key])
 
     def entries(self, kernel_id: Optional[str] = None,
                 device: Optional[str] = None) -> list:
@@ -153,12 +283,10 @@ class EvalCache:
 
     # -- winners (the DSE outcome record) -------------------------------
     def _load_winners(self) -> Dict[str, Dict[str, Any]]:
-        if self._winners is None:
-            try:
-                with open(self.winners_path) as f:
-                    self._winners = json.load(f)
-            except (OSError, ValueError):
-                self._winners = {}
+        stamp = _file_stamp(self.winners_path)
+        if self._winners is None or stamp != self._winners_stamp:
+            self._winners = _read_json(self.winners_path)
+            self._winners_stamp = stamp
         return self._winners
 
     def set_winner(self, kernel_id: str, device: str,
@@ -169,16 +297,16 @@ class EvalCache:
         cycles scale with problem shape and stale-fingerprint entries
         survive kernel edits — so the engine declares its winner
         explicitly and ``best_config`` serves that."""
-        w = self._load_winners()
-        w[f"{kernel_id}@{device}"] = {
+        rec = {
             "kernel": kernel_id, "device": device, "config": dict(config),
             "cycles_per_step": float(cycles_per_step), "shape": shape,
         }
-        os.makedirs(self.root, exist_ok=True)
-        tmp = self.winners_path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(w, f, indent=1, sort_keys=True)
-        os.replace(tmp, self.winners_path)
+
+        def merge(w: Dict[str, Any]) -> None:
+            w[f"{kernel_id}@{device}"] = rec
+
+        self._winners, self._winners_stamp = \
+            self._mutate(self.winners_path, merge)
 
     def best_config(self, kernel_id: str,
                     device: Optional[str] = None) -> Optional[Dict[str, Any]]:
@@ -196,26 +324,24 @@ class EvalCache:
         return dict(best["config"])
 
     def clear(self, kernel_id: Optional[str] = None) -> int:
-        data = self._load()
-        if kernel_id is None:
-            n = len(data)
-            data.clear()
-        else:
-            drop = [k for k, e in data.items()
-                    if e.get("kernel") == kernel_id]
-            n = len(drop)
-            for k in drop:
+        dropped = [0]
+
+        def drop_entries(data: Dict[str, Any]) -> None:
+            keys = [k for k, e in data.items()
+                    if kernel_id is None or e.get("kernel") == kernel_id]
+            dropped[0] = len(keys)
+            for k in keys:
                 del data[k]
-        self._save()
-        w = self._load_winners()
-        for k in [k for k, e in w.items()
-                  if kernel_id is None or e.get("kernel") == kernel_id]:
-            del w[k]
-        if os.path.exists(self.winners_path) or w:
-            os.makedirs(self.root, exist_ok=True)
-            with open(self.winners_path, "w") as f:
-                json.dump(w, f, indent=1, sort_keys=True)
-        return n
+
+        def drop_winners(w: Dict[str, Any]) -> None:
+            for k in [k for k, e in w.items()
+                      if kernel_id is None or e.get("kernel") == kernel_id]:
+                del w[k]
+
+        self._data, self._stamp = self._mutate(self.path, drop_entries)
+        self._winners, self._winners_stamp = \
+            self._mutate(self.winners_path, drop_winners)
+        return dropped[0]
 
     def __len__(self) -> int:
         return len(self._load())

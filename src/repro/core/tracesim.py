@@ -1,0 +1,469 @@
+"""Trace-once cycle simulator: capture a kernel's schedule ONCE, price
+any candidate config in microseconds with no tracing and no device.
+
+LightningSim and the Rapid Cycle-Accurate Simulator (PAPERS.md) both
+split *trace capture* from *cycle evaluation* so new configurations
+re-price without re-running the design. This module is that split for
+the model-clock profiler: one :func:`capture` per (kernel, shape,
+config) walks the traced jaxpr exactly once and stores everything the
+cost model needs as a plain-data, JSON-serializable :class:`KernelTrace`
+artifact; :func:`price` then replays the captured schedule arithmetic —
+honoring the process-global ``set_kernel_calibration`` state and the
+``collective_axis_sizes`` context *at pricing time* — without touching
+jax at all.
+
+Two pricing modes, matching the two live measurement paths:
+
+``mode="sim"``
+    The grid-replay clock: per ``pallas_call`` site, grid steps x block
+    DMA plus the scalar-env-walked body cycles (``pl.when`` causal skips
+    seen per tile). Integer-identical to the live kernel-probed replay
+    (``ProbeConfig(kernel_probes=("*",))`` decode span) on every
+    statically-gridded kernel — asserted across the golden kernels in
+    ``tests/test_tracesim.py``.
+
+``mode="flat"``
+    The flat model clock: pallas sites priced by
+    ``costmodel.flat_pallas_cycles`` (calibration-scaled body + DMA per
+    step). Integer-identical to ``DSEEngine._measure``'s ProbeSession
+    span/steps — which is exactly the quantity device measurement
+    produces, so the sweep farm filters thousands of candidates on the
+    same clock the finalists are measured on.
+
+The walked body total is memoized over the grid axes the body actually
+reads via ``program_id``: only their cartesian product is walked and the
+result is multiplied by the unused axes' sizes, so capture stays cheap
+even for large grids whose bodies only branch on one coordinate.
+
+``TraceStore`` persists artifacts next to the :class:`EvalCache`
+(``<cache>/traces/``), one JSON per (kernel, shape, space fingerprint)
+— a kernel edit changes the fingerprint and naturally invalidates the
+stale file — with the same :class:`~repro.core.incremental.FileLock`
+read-merge-write discipline, so multi-process sweep workers can share
+one store with zero lost entries.
+"""
+from __future__ import annotations
+
+import hashlib
+import itertools
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import costmodel as cm
+from repro.core import kernelprobe as kp
+from repro.core.incremental import FileLock, fingerprint_closed
+
+TRACE_VERSION = 1
+
+
+# ----------------------------------------------------------- artifacts
+
+@dataclass(frozen=True)
+class KernelSite:
+    """One ``pallas_call`` site in the captured schedule.
+
+    ``count`` is the static execution multiplicity (outer scan trip
+    counts multiplied through); ``walked`` is the scalar-env grid-walk
+    body total over all grid steps (None when the grid is dynamic or
+    the capture ran with ``walk=False``).
+    """
+    kernel: str
+    grid: Optional[Tuple[int, ...]]
+    steps: int                    # grid-step product (1 for dynamic grids)
+    count: int
+    dma: int                      # per-step HBM<->VMEM block DMA cycles
+    body_static: int              # flat per-step body cycles, uncalibrated
+    walked: Optional[int] = None
+
+    def cycles(self, mode: str) -> int:
+        if mode == "sim" and self.walked is not None:
+            return self.count * (self.steps * self.dma + self.walked)
+        return self.count * cm.flat_pallas_cycles(
+            self.kernel, self.body_static, self.dma, self.steps)
+
+
+@dataclass(frozen=True)
+class CollectiveSite:
+    """One collective eqn, decomposed so the ring wire model can
+    re-price it for a different mesh (``collective_axis_sizes``) without
+    the original eqn."""
+    prim: str
+    axes: Tuple[str, ...]
+    count: int
+    flops: int
+    in_bytes: int
+    out_bytes: int
+
+    def cycles(self) -> int:
+        return self.count * cm.collective_cycles(
+            self.prim, self.axes, flops=self.flops,
+            in_bytes=self.in_bytes, out_bytes=self.out_bytes)
+
+
+@dataclass
+class TraceEntry:
+    """The captured schedule of ONE (config, shape) candidate: a flat
+    base-cycle term for everything the cost model prices statically,
+    plus decomposed pallas and collective sites that re-price against
+    the calibration / mesh context current at :func:`price` time."""
+    config: Dict[str, Any]
+    fingerprint: str              # lowered-IR hash (EvalCache key scheme)
+    base_cycles: int
+    sites: List[KernelSite] = field(default_factory=list)
+    collectives: List[CollectiveSite] = field(default_factory=list)
+    exact: bool = True            # sim price == live replay guaranteed?
+    walked: bool = True           # sites carry grid-walk totals?
+    vmem_bytes: int = 0
+    hbm_bytes: int = 0
+    flops: int = 0
+    grid_steps: int = 0
+
+
+@dataclass
+class KernelTrace:
+    """All captured entries for one (kernel, shape), keyed by canonical
+    config JSON. ``space_fingerprint`` is the default config's lowered-
+    IR hash: any edit to the kernel source changes it, so a persisted
+    trace can never silently price a stale schedule."""
+    kernel_id: str
+    shape: str
+    space_fingerprint: str = ""
+    entries: Dict[str, TraceEntry] = field(default_factory=dict)
+    version: int = TRACE_VERSION
+
+
+def config_key(config: Dict[str, Any]) -> str:
+    return json.dumps(config, sort_keys=True, separators=(",", ":"))
+
+
+def shape_signature(args: Sequence[Any]) -> str:
+    """Canonical (shape, dtype) signature of example inputs."""
+    import jax
+    leaves = [[list(getattr(a, "shape", ())), str(getattr(a, "dtype", "?"))]
+              for a in jax.tree_util.tree_leaves(args)]
+    return json.dumps(leaves, separators=(",", ":"))
+
+
+# ------------------------------------------------------------- capture
+
+class _NullHierarchy:
+    """No-op site table: ``walk_step`` then prices every eqn with the
+    cost-model fallback — the same values extraction would register."""
+
+    def info_at(self, eqn, entry_path):
+        return None
+
+
+class _SumOps(kp._WalkOps):
+    """Concrete walk accumulator: plain-integer clock, no probe state."""
+
+    def __init__(self):
+        self.total = 0
+
+    def select(self, i, opts: Sequence[int]):
+        return opts[int(np.clip(int(np.asarray(i)), 0, len(opts) - 1))]
+
+    def advance(self, v) -> None:
+        self.total += int(v)
+
+    def transition(self, a, b) -> None:
+        pass
+
+
+def _program_id_axes(jaxpr, acc: Optional[set] = None) -> set:
+    """Grid axes the body actually reads (recursively) via
+    ``program_id`` — the only step-dependent walk inputs."""
+    acc = set() if acc is None else acc
+    for e in jaxpr.eqns:
+        if e.primitive.name == "program_id":
+            acc.add(int(e.params["axis"]))
+        for s in cm._sub_jaxprs(e):
+            _program_id_axes(cm._as_jaxpr(s), acc)
+    return acc
+
+
+def _walked_total(eqn) -> Optional[int]:
+    """Scalar-env walk total over ALL grid steps of one pallas site,
+    enumerating only the axes the body reads (times the unused axes'
+    sizes)."""
+    grid = kp.static_grid(eqn)
+    if grid is None:
+        return None
+    body = cm._as_jaxpr(eqn.params["jaxpr"])
+    used = sorted(a for a in _program_id_axes(body) if a < len(grid))
+    # sequential-step strides, last axis fastest (pallas iteration order)
+    strides = [1] * len(grid)
+    for i in range(len(grid) - 2, -1, -1):
+        strides[i] = strides[i + 1] * grid[i + 1]
+    unused_mult = 1
+    for a in range(len(grid)):
+        if a not in used:
+            unused_mult *= grid[a]
+    h = _NullHierarchy()
+    total = 0
+    for combo in itertools.product(*(range(grid[a]) for a in used)):
+        it = sum(idx * strides[a] for a, idx in zip(used, combo))
+        ops = _SumOps()
+        kp.walk_step(h, body, grid, it, ops, "")
+        total += ops.total
+    return total * unused_mult
+
+
+def _capture_jaxpr(jaxpr, mult: int, entry: TraceEntry, walk: bool) -> None:
+    for e in jaxpr.eqns:
+        name = e.primitive.name
+        if name == "pallas_call":
+            try:
+                body = cm._as_jaxpr(e.params["jaxpr"])
+                grid = kp.static_grid(e)
+                site = KernelSite(
+                    kernel=cm.pallas_kernel_name(e), grid=grid,
+                    steps=cm._pallas_grid_steps(e), count=mult,
+                    dma=cm.pallas_dma_cycles(e),
+                    body_static=cm.static_jaxpr_cycles(body),
+                    walked=(_walked_total(e)
+                            if walk and grid is not None else None))
+            except (KeyError, AttributeError, TypeError):
+                # unknown pallas param layout: flat generic fallback,
+                # exactly like eqn_cost
+                entry.base_cycles += mult * cm.eqn_cost(e).cycles
+                entry.exact = False
+                continue
+            entry.sites.append(site)
+            if grid is None or (walk and site.walked is None):
+                entry.exact = False
+            continue
+        if name == "scan":
+            _capture_jaxpr(cm._as_jaxpr(e.params["jaxpr"]),
+                           mult * int(e.params["length"]), entry, walk)
+            continue
+        if name in ("while", "cond"):
+            # data-dependent control flow: statically priced, like the
+            # static estimate — runtime counters alone know the truth
+            entry.base_cycles += mult * cm.static_eqn_cycles(e)
+            entry.exact = False
+            continue
+        if name in cm._COLLECTIVES:
+            in_b = sum(cm._aval_bytes(v.aval) for v in e.invars
+                       if hasattr(v, "aval"))
+            out_b = sum(cm._aval_bytes(v.aval) for v in e.outvars)
+            entry.collectives.append(CollectiveSite(
+                prim=name, axes=cm.collective_eqn_axes(e), count=mult,
+                flops=cm._aval_size(e.outvars[0].aval) if e.outvars else 0,
+                in_bytes=in_b, out_bytes=out_b))
+            continue
+        sub = next(iter(cm._sub_jaxprs(e)), None)
+        if name in cm._SUBJAXPR_PRIMS and sub is not None:
+            _capture_jaxpr(cm._as_jaxpr(sub), mult, entry, walk)
+            continue
+        entry.base_cycles += mult * cm.eqn_cost(e).cycles
+
+
+def capture_closed(closed, *, config: Optional[Dict[str, Any]] = None,
+                   walk: bool = True) -> TraceEntry:
+    """Capture a trace entry from an already-traced closed jaxpr."""
+    entry = TraceEntry(config=dict(config or {}),
+                       fingerprint=fingerprint_closed(closed),
+                       base_cycles=0, walked=walk)
+    _capture_jaxpr(closed.jaxpr, 1, entry, walk)
+    res = cm.jaxpr_kernel_resources(closed.jaxpr)
+    entry.vmem_bytes = res.vmem_bytes
+    entry.hbm_bytes = res.hbm_bytes
+    entry.flops = res.flops
+    entry.grid_steps = res.grid_steps
+    return entry
+
+
+def capture_entry(space, config: Dict[str, Any], *,
+                  walk: bool = True) -> TraceEntry:
+    """Trace ONE candidate of a ``SearchSpace`` and capture its
+    schedule (the only step that runs jax; everything downstream is
+    plain arithmetic)."""
+    import jax
+    closed = jax.make_jaxpr(space.bind(config))(*space.args)
+    return capture_closed(closed, config=config, walk=walk)
+
+
+def capture(space, configs: Optional[Sequence[Dict[str, Any]]] = None, *,
+            walk: bool = True,
+            space_fingerprint: str = "") -> KernelTrace:
+    """Capture a :class:`KernelTrace` over ``configs`` (default: every
+    valid candidate of the space)."""
+    trace = KernelTrace(kernel_id=space.kernel_id,
+                        shape=shape_signature(space.args),
+                        space_fingerprint=space_fingerprint)
+    for cfg in (space.candidates() if configs is None else configs):
+        trace.entries[config_key(cfg)] = capture_entry(space, cfg, walk=walk)
+    return trace
+
+
+def space_fingerprint(space) -> str:
+    """Lowered-IR hash of the space's DEFAULT config — the staleness
+    key for persisted traces (any kernel-source edit changes it)."""
+    import jax
+    closed = jax.make_jaxpr(space.bind(space.default))(*space.args)
+    return fingerprint_closed(closed)
+
+
+# ------------------------------------------------------------- pricing
+
+def price(trace: Union[KernelTrace, TraceEntry],
+          config: Optional[Dict[str, Any]] = None, *,
+          mode: str = "sim") -> int:
+    """Cycles of one captured candidate — pure arithmetic, re-evaluated
+    against the CURRENT ``kernel_calibration`` state (flat site term)
+    and ``collective_axis_sizes`` context. See the module docstring for
+    the two modes."""
+    if mode not in ("sim", "flat"):
+        raise ValueError(f"price mode must be 'sim' or 'flat', got {mode!r}")
+    if isinstance(trace, KernelTrace):
+        if config is None:
+            raise ValueError("price(trace, config): config required when "
+                             "pricing a KernelTrace")
+        key = config_key(config)
+        entry = trace.entries.get(key)
+        if entry is None:
+            raise KeyError(
+                f"config {key} not captured in trace of "
+                f"{trace.kernel_id} ({len(trace.entries)} entries)")
+    else:
+        entry = trace
+    total = entry.base_cycles
+    for s in entry.sites:
+        total += s.cycles(mode)
+    for c in entry.collectives:
+        total += c.cycles()
+    return int(total)
+
+
+def entry_resources(entry: TraceEntry) -> cm.KernelResources:
+    """The candidate's static footprint for ``DeviceBudget`` pruning,
+    rebuilt from the artifact (``static_cycles`` is the pallas-site
+    flat term under the current calibration, mirroring
+    ``jaxpr_kernel_resources``)."""
+    static = sum(s.count * cm.flat_pallas_cycles(
+        s.kernel, s.body_static, s.dma, s.steps) for s in entry.sites)
+    return cm.KernelResources(
+        vmem_bytes=entry.vmem_bytes, hbm_bytes=entry.hbm_bytes,
+        flops=entry.flops, grid_steps=entry.grid_steps,
+        static_cycles=static)
+
+
+# ------------------------------------------------------- serialization
+
+def entry_to_dict(e: TraceEntry) -> Dict[str, Any]:
+    return {
+        "config": e.config, "fingerprint": e.fingerprint,
+        "base_cycles": e.base_cycles, "exact": e.exact, "walked": e.walked,
+        "vmem_bytes": e.vmem_bytes, "hbm_bytes": e.hbm_bytes,
+        "flops": e.flops, "grid_steps": e.grid_steps,
+        "sites": [{"kernel": s.kernel,
+                   "grid": list(s.grid) if s.grid is not None else None,
+                   "steps": s.steps, "count": s.count, "dma": s.dma,
+                   "body_static": s.body_static, "walked": s.walked}
+                  for s in e.sites],
+        "collectives": [{"prim": c.prim, "axes": list(c.axes),
+                         "count": c.count, "flops": c.flops,
+                         "in_bytes": c.in_bytes, "out_bytes": c.out_bytes}
+                        for c in e.collectives],
+    }
+
+
+def entry_from_dict(d: Dict[str, Any]) -> TraceEntry:
+    return TraceEntry(
+        config=dict(d["config"]), fingerprint=d["fingerprint"],
+        base_cycles=int(d["base_cycles"]), exact=bool(d["exact"]),
+        walked=bool(d["walked"]), vmem_bytes=int(d["vmem_bytes"]),
+        hbm_bytes=int(d["hbm_bytes"]), flops=int(d["flops"]),
+        grid_steps=int(d["grid_steps"]),
+        sites=[KernelSite(
+            kernel=s["kernel"],
+            grid=tuple(s["grid"]) if s["grid"] is not None else None,
+            steps=int(s["steps"]), count=int(s["count"]), dma=int(s["dma"]),
+            body_static=int(s["body_static"]),
+            walked=int(s["walked"]) if s["walked"] is not None else None)
+            for s in d["sites"]],
+        collectives=[CollectiveSite(
+            prim=c["prim"], axes=tuple(c["axes"]), count=int(c["count"]),
+            flops=int(c["flops"]), in_bytes=int(c["in_bytes"]),
+            out_bytes=int(c["out_bytes"])) for c in d["collectives"]])
+
+
+def to_dict(trace: KernelTrace) -> Dict[str, Any]:
+    return {"kernel": trace.kernel_id, "shape": trace.shape,
+            "space_fingerprint": trace.space_fingerprint,
+            "version": trace.version,
+            "entries": {k: entry_to_dict(e)
+                        for k, e in sorted(trace.entries.items())}}
+
+
+def from_dict(d: Dict[str, Any]) -> KernelTrace:
+    return KernelTrace(
+        kernel_id=d["kernel"], shape=d["shape"],
+        space_fingerprint=d.get("space_fingerprint", ""),
+        version=int(d.get("version", TRACE_VERSION)),
+        entries={k: entry_from_dict(v) for k, v in d["entries"].items()})
+
+
+def to_json(trace: KernelTrace) -> str:
+    """Canonical JSON: sorted keys, fixed separators — byte-identical
+    across round-trips, so artifacts diff and hash cleanly."""
+    return json.dumps(to_dict(trace), sort_keys=True,
+                      separators=(",", ":"))
+
+
+def from_json(s: str) -> KernelTrace:
+    return from_dict(json.loads(s))
+
+
+# ------------------------------------------------------------ on-disk
+
+class TraceStore:
+    """Shared on-disk store of trace artifacts, colocated with the
+    ``EvalCache`` root. One JSON file per (kernel, shape, space
+    fingerprint); concurrent ``merge`` calls are read-merge-write under
+    a :class:`FileLock`, entry-wise, so parallel capture workers never
+    drop each other's entries."""
+
+    def __init__(self, root: str):
+        self.root = os.path.join(os.path.expanduser(root), "traces")
+
+    def path_for(self, kernel_id: str, shape: str,
+                 space_fingerprint: str = "") -> str:
+        blob = f"{kernel_id}|{shape}|{space_fingerprint}|v{TRACE_VERSION}"
+        h = hashlib.sha256(blob.encode()).hexdigest()[:16]
+        return os.path.join(self.root, f"{kernel_id}__{h}.json")
+
+    def load(self, kernel_id: str, shape: str,
+             space_fingerprint: str = "") -> Optional[KernelTrace]:
+        path = self.path_for(kernel_id, shape, space_fingerprint)
+        try:
+            with open(path) as f:
+                return from_dict(json.load(f))
+        except (OSError, ValueError, KeyError):
+            return None
+
+    def merge(self, trace: KernelTrace) -> KernelTrace:
+        """Merge ``trace``'s entries into the stored artifact (new
+        entries win per config key); returns the merged trace."""
+        path = self.path_for(trace.kernel_id, trace.shape,
+                             trace.space_fingerprint)
+        os.makedirs(self.root, exist_ok=True)
+        with FileLock(path + ".lock"):
+            try:
+                with open(path) as f:
+                    merged = from_dict(json.load(f))
+            except (OSError, ValueError, KeyError):
+                merged = KernelTrace(
+                    kernel_id=trace.kernel_id, shape=trace.shape,
+                    space_fingerprint=trace.space_fingerprint)
+            merged.entries.update(trace.entries)
+            tmp = f"{path}.tmp.{os.getpid()}"
+            with open(tmp, "w") as f:
+                f.write(to_json(merged))
+            os.replace(tmp, path)
+        return merged

@@ -150,3 +150,59 @@ SPACES = {
     "ssd_scan": ssd_scan_space,
     "paged_attention": paged_attention_space,
 }
+
+
+# ------------------------------------------------- sweep-farm variants
+
+def _pow2_range(lo: int, hi: int) -> Tuple[int, ...]:
+    out = []
+    v = 1
+    while v <= hi:
+        if v >= lo:
+            out.append(v)
+        v *= 2
+    return tuple(out)
+
+
+def sweep_space(kernel_id: str, **shape):
+    """Dense sweep-farm variant of a registered space: same ``bind`` /
+    validity / default, tile axes widened to every power of two up to
+    the problem size. The floor ``max(8, S // 32)`` bounds the grid-step
+    product per candidate, which keeps trace capture (the scalar-env
+    grid walk enumerates the used ``program_id`` axes) cheap even for
+    thousand-candidate sweeps. Rebuilt by name inside sweep workers —
+    ``bind`` closures don't pickle across the spawn boundary."""
+    if kernel_id == "flash_attention":
+        S = int(shape.get("S", 256))
+        blocks = _pow2_range(max(8, S // 32), S)
+        return flash_attention_space(blocks_q=blocks, blocks_k=blocks,
+                                     pipelines=(1, 2, 4, 8), **shape)
+    if kernel_id == "ssd_scan":
+        L = int(shape.get("L", 256))
+        chunks = _pow2_range(max(8, L // 32), L)
+        return ssd_scan_space(chunks=chunks, pipelines=(1, 2, 4, 8), **shape)
+    if kernel_id == "paged_attention":
+        n_pages = int(shape.get("n_pages", 8))
+        return paged_attention_space(
+            pages_per_step=_pow2_range(1, n_pages), **shape)
+    raise KeyError(f"no sweep space for kernel {kernel_id!r}; "
+                   f"known: {tuple(SPACES)}")
+
+
+def sweep_shapes(kernel_id: str, *, seqs: Tuple[int, ...] = (),
+                 heads: Tuple[int, ...] = ()) -> list:
+    """Default (sequence x heads) shape grid a sweep iterates — the
+    candidate pool is configs x shapes, with calibration transferred
+    from the first shape to the rest."""
+    if kernel_id == "flash_attention":
+        return [{"S": s, "H": h, "D": 32}
+                for s in (seqs or (128, 256, 512))
+                for h in (heads or (2,))]
+    if kernel_id == "ssd_scan":
+        return [{"L": s, "H": h}
+                for s in (seqs or (128, 256, 512))
+                for h in (heads or (2,))]
+    if kernel_id == "paged_attention":
+        return [{"n_pages": n} for n in (seqs or (8, 16))]
+    raise KeyError(f"no sweep shapes for kernel {kernel_id!r}; "
+                   f"known: {tuple(SPACES)}")

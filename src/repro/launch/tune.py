@@ -10,6 +10,14 @@ kernel at the given shapes, prints the leaderboard, and leaves the
 winners in the on-disk cache where ``serve.py --autotune`` /
 ``train.py --autotune`` (and ``repro.kernels.tuning.load_cache``) pick
 them up.
+
+``--sweep`` switches to the trace-once sweep farm (``core.dse.
+run_sweep``): dense config x shape candidate pools captured once as
+``KernelTrace`` artifacts, simulator-priced in microseconds, with
+device measurement reserved for the per-shape finalists:
+
+    PYTHONPATH=src python -m repro.tune --kernel flash_attention \
+        --sweep --sweep-seqs 128,256,512 --workers 4 --top-k 16
 """
 from __future__ import annotations
 
@@ -19,9 +27,33 @@ import sys
 from typing import Any, Dict, Optional
 
 from repro.core import DeviceBudget, DSEEngine, EvalCache
+from repro.core.dse import run_sweep
 from repro.kernels import search_spaces
 
 KERNELS = tuple(search_spaces.SPACES)
+
+
+def _int_tuple(spec: str) -> tuple:
+    return tuple(int(v) for v in spec.split(",") if v.strip())
+
+
+def sweep_kernel(kernel: str, args: argparse.Namespace,
+                 cache: EvalCache) -> Dict[str, Any]:
+    shapes = None
+    if args.sweep_seqs or args.sweep_heads:
+        shapes = search_spaces.sweep_shapes(
+            kernel, seqs=_int_tuple(args.sweep_seqs or ""),
+            heads=_int_tuple(args.sweep_heads or ""))
+    budget: Optional[DeviceBudget] = DeviceBudget(
+        vmem_bytes=args.budget_vmem, hbm_bytes=args.budget_hbm,
+        flops=args.budget_flops)
+    result = run_sweep(
+        kernel, shapes, workers=args.workers, top_k=args.top_k,
+        steps=args.max_steps, budget=budget, cache=cache,
+        calibrate=not args.no_calibrate, walk=args.walk,
+        cycle_source=args.cycle_source, reuse_traces=not args.no_reuse)
+    print(result.summary())
+    return result.to_dict()
 
 
 def build_space(kernel: str, args: argparse.Namespace):
@@ -91,6 +123,26 @@ def main(argv=None) -> int:
                     help="leaderboard rows to print")
     ap.add_argument("--json", default=None,
                     help="write the full tune result(s) to this path")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run the trace-once sweep farm instead of "
+                         "successive halving")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="sweep worker processes (<=1 runs inline)")
+    ap.add_argument("--top-k", type=int, default=16,
+                    help="sweep: total device-measured finalists across "
+                         "shapes (>=2 per shape)")
+    ap.add_argument("--sweep-seqs", default=None,
+                    help="sweep: comma-separated sequence lengths "
+                         "(S / L / n_pages)")
+    ap.add_argument("--sweep-heads", default=None,
+                    help="sweep: comma-separated head counts")
+    ap.add_argument("--no-calibrate", action="store_true",
+                    help="sweep: skip the grid-step calibration run")
+    ap.add_argument("--walk", action="store_true",
+                    help="sweep: also capture walked (sim-mode) grid "
+                         "totals per candidate (slower capture)")
+    ap.add_argument("--no-reuse", action="store_true",
+                    help="sweep: ignore stored trace artifacts")
     args = ap.parse_args(argv)
 
     kernels = list(KERNELS) if args.kernel == "all" else [args.kernel]
@@ -100,7 +152,8 @@ def main(argv=None) -> int:
         if args.clear_cache:
             n = cache.clear(kernel)
             print(f"# cleared {n} cached entries for {kernel}")
-        results[kernel] = tune_kernel(kernel, args, cache)
+        results[kernel] = (sweep_kernel(kernel, args, cache) if args.sweep
+                          else tune_kernel(kernel, args, cache))
         print()
     if args.json:
         with open(args.json, "w") as f:

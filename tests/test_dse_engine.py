@@ -256,3 +256,109 @@ def test_tune_cli_smoke(tmp_path, capsys):
     # the winner is now loadable for --autotune
     assert EvalCache(cache_dir).best_config("flash_attention") is not None
     tuning.clear_tuned()
+
+
+# --------------------------------------- cache correctness regressions
+
+def test_put_keeps_higher_step_entry(cache):
+    """Regression: put() used to overwrite unconditionally, so a cheap
+    1-step probe could clobber a converged 8-step measurement."""
+    cfg = {"n": 1}
+    cache.put("toy", cfg, "aaaa", device_kind(),
+              cycles_per_step=100.0, steps=8)
+    kept = cache.put("toy", cfg, "aaaa", device_kind(),
+                     cycles_per_step=999.0, steps=1)
+    assert kept["steps"] == 8 and kept["cycles_per_step"] == 100.0
+    got = cache.get("toy", cfg, "aaaa", device_kind())
+    assert got["steps"] == 8 and got["cycles_per_step"] == 100.0
+    # equal step count is a refresh, not a downgrade
+    cache.put("toy", cfg, "aaaa", device_kind(),
+              cycles_per_step=90.0, steps=8)
+    assert cache.get("toy", cfg, "aaaa", device_kind())[
+        "cycles_per_step"] == 90.0
+
+
+_WRITER = """
+import sys
+from repro.core import EvalCache
+root, tag = sys.argv[1], sys.argv[2]
+cache = EvalCache(root)
+for i in range(40):
+    cache.put("toy", {"n": i}, "f" + tag, "cpu",
+              cycles_per_step=float(i), steps=4)
+cache.set_winner("toy_" + tag, "cpu", {"n": int(tag)},
+                 cycles_per_step=1.0)
+print("done")
+"""
+
+
+def test_concurrent_writers_lose_no_entries(tmp_path):
+    """Regression: _save() rewrote the whole file from a possibly-stale
+    in-memory snapshot with no locking, so two processes sharing a cache
+    dir silently dropped each other's measurements."""
+    import os
+    import subprocess
+    import sys
+
+    import repro
+    root = str(tmp_path / "shared")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.dirname(os.path.dirname(repro.__file__))
+    procs = [subprocess.Popen([sys.executable, "-c", _WRITER, root, tag],
+                              env=env, stdout=subprocess.PIPE,
+                              stderr=subprocess.PIPE)
+             for tag in ("0", "1")]
+    for p in procs:
+        out, err = p.communicate(timeout=120)
+        assert p.returncode == 0, err.decode()
+        assert b"done" in out
+    merged = EvalCache(root)
+    for tag in ("0", "1"):
+        hits = [e for e in merged.entries("toy")
+                if e["fingerprint"] == f"f{tag}"]
+        assert len(hits) == 40, f"writer {tag} lost {40 - len(hits)} entries"
+        assert merged.best_config(f"toy_{tag}", "cpu") == {"n": int(tag)}
+
+
+# -------------------------------------------------------- sweep farm
+
+def test_sweep_farm_two_workers_smoke(tmp_path):
+    """Tier-1 end-to-end: 2-process capture/measure over a shared cache,
+    simulator-first filtering, warm rerun fully served from artifacts."""
+    from repro.core.dse import run_sweep
+    shapes = [{"S": 64, "D": 16}, {"S": 128, "D": 16}]
+    cache = EvalCache(str(tmp_path / "sweep"))
+    res = run_sweep("flash_attention", shapes, workers=2, top_k=6,
+                    steps=2, cache=cache, calibrate=False)
+    assert res.n_candidates > 2 * res.n_finalists
+    assert res.n_measured <= res.n_finalists <= 6
+    assert res.n_captured == res.n_candidates
+    assert len(res.shapes) == 2
+    for sh in res.shapes:
+        assert sh.best_cycles <= sh.default_cycles
+        assert sh.best_config is not None
+    assert len(cache.entries("flash_attention")) == res.n_measured
+    assert cache.best_config("flash_attention") is not None
+    # warm rerun: traces + evals all on disk, nothing touches the device
+    res2 = run_sweep("flash_attention", shapes, workers=2, top_k=6,
+                     steps=2, cache=EvalCache(str(tmp_path / "sweep")),
+                     calibrate=False)
+    assert res2.n_measured == 0 and res2.n_captured == 0
+    assert res2.n_cache_hits == res.n_measured
+    assert [s.best_config for s in res2.shapes] == \
+        [s.best_config for s in res.shapes]
+
+
+def test_sweep_calibration_transfers(tmp_path):
+    from repro.core import costmodel as cm
+    from repro.core.dse import run_sweep
+    cm.clear_kernel_calibration()
+    try:
+        res = run_sweep("flash_attention", [{"S": 64, "D": 16}], workers=0,
+                        top_k=2, steps=2,
+                        cache=EvalCache(str(tmp_path / "cal")),
+                        calibrate=True)
+    finally:
+        cm.clear_kernel_calibration()
+    assert res.n_calibration_runs == 1
+    assert res.calibration_scale is not None and res.calibration_scale > 0
