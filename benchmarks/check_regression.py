@@ -36,11 +36,12 @@ LOWER_BETTER = (
     "probe_ops", "probe_bytes", "measurements", "probed_steps",
     "mean_cycles", "skew", "wire_B", "err", "sub_walks",
     "retraces", "pages_peak", "bus_ns_per_row", "false_positives",
-    "sim_us_per_config", "device_measurements",
+    "sim_us_per_config", "device_measurements", "evictions",
+    "hol_blocked_steps",
 )
 HIGHER_BETTER = ("speedup_x1000", "saving", "exact", "cache_hits",
                  "reduction_x1000", "graphs", "invariants", "hit_x1000",
-                 "alerts", "sweep_configs")
+                 "alerts", "sweep_configs", "tok_per_step_x1000")
 
 _NUM = re.compile(r"^(-?\d+(?:\.\d+)?)(?:[%x]?)$")
 

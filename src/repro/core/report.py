@@ -502,6 +502,21 @@ def engine_phase_table(phase_totals: Dict[str, Dict[str, int]]) -> str:
     return "\n".join(lines)
 
 
+def engine_chunk_table(chunk_stats: Dict[tuple, Dict[str, int]]) -> str:
+    """Per-(ctx pages, chunk pages) attribution for chunked-prefill
+    continuation steps (``InferenceEngine.chunk_stats``). Each row is
+    one pinned chunkpf trace shape; cycles include the paired cache
+    scatter, so rows sum to the chunked share of prefill+cache time."""
+    lines = [f"{'ctx pages':>10}{'chunk pages':>13}{'steps':>8}"
+             f"{'cycles':>14}{'cycles/step':>13}"]
+    for (cs, n) in sorted(chunk_stats):
+        v = chunk_stats[(cs, n)]
+        cyc, steps = v.get("cycles", 0), v.get("steps", 0)
+        per = cyc / steps if steps else 0.0
+        lines.append(f"{cs:>10}{n:>13}{steps:>8}{cyc:>14}{per:>13.1f}")
+    return "\n".join(lines)
+
+
 def engine_request_table(requests) -> str:
     """Per-request phase attribution rows for finished engine requests.
 

@@ -9,12 +9,13 @@ from repro.engine.engine import (EngineConfig, InferenceEngine, PHASES,
                                  Request)
 from repro.engine.pagetable import (NULL_PAGE, PagePoolExhausted, PageTable,
                                     PrefixTree)
-from repro.engine.step import (build_engine_prefill, build_page_scatter,
-                               build_paged_decode, engine_compatible)
+from repro.engine.step import (build_chunk_prefill, build_engine_prefill,
+                               build_page_scatter, build_paged_decode,
+                               donation_argnums, engine_compatible)
 
 __all__ = [
     "EngineConfig", "InferenceEngine", "PHASES", "Request",
     "NULL_PAGE", "PagePoolExhausted", "PageTable", "PrefixTree",
-    "build_engine_prefill", "build_page_scatter", "build_paged_decode",
-    "engine_compatible",
+    "build_chunk_prefill", "build_engine_prefill", "build_page_scatter",
+    "build_paged_decode", "donation_argnums", "engine_compatible",
 ]

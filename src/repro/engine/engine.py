@@ -25,6 +25,28 @@ from :mod:`repro.engine.step`):
   device model-clock deltas around every call. Prefill and cache cycles
   are exclusive to one request; a decode delta is shared by its batch
   (each rider logs the bucket width in ``decode_batches``).
+- **Chunked prefill.** With ``prefill_chunk_pages=K`` a prompt wider
+  than ``K`` pages prefills one page-aligned chunk per scheduler round,
+  interleaved with decode rounds, so a long prompt never head-of-line
+  blocks the running decode batch (``hol_blocked_steps`` counts the
+  decode rounds a whole-prompt prefill *would* have displaced beyond
+  one chunk quantum). Chunk continuations replay the whole-prompt flash
+  row plan against pool-gathered context, so outputs stay bit-identical
+  — see :func:`repro.engine.step.build_chunk_prefill`. Chunk traces are
+  pinned per (ctx pages, chunk pages) pair at warmup.
+- **Prefix-aware eviction.** Under pool pressure admission reclaims
+  prefix-cache pages through :meth:`PrefixTree.evict` — leaf-first,
+  least-recently-matched first, never a page a live request still
+  references — so hot shared prefixes survive and
+  :class:`PagePoolExhausted` is reachable only when live requests alone
+  exceed the pool. ``evict_policy="clear"`` keeps the legacy
+  all-or-nothing behavior for A/B benchmarking.
+- **Donated pool buffers.** Off probe mode, steps that return an
+  updated pool (cache scatter, decode) are jitted with
+  ``donate_argnums`` so the paged KV pool updates in place instead of
+  allocating a fresh copy per step. The engine immediately rebinds
+  ``pool_k``/``pool_v`` to each step's outputs; the donated inputs are
+  dead the moment the step is called and must never be re-read.
 
 Outputs are bit-identical to the unbatched reference serving path
 (asserted in tests/test_engine.py) — batching, paging, padding, and
@@ -43,8 +65,9 @@ import numpy as np
 
 from repro.engine.pagetable import (NULL_PAGE, PagePoolExhausted, PageTable,
                                     PrefixTree)
-from repro.engine.step import (build_engine_prefill, build_page_scatter,
-                               build_paged_decode, engine_compatible)
+from repro.engine.step import (build_chunk_prefill, build_engine_prefill,
+                               build_page_scatter, build_paged_decode,
+                               donation_argnums, engine_compatible)
 
 PHASES = ("prefill", "cache", "decode")
 
@@ -71,6 +94,16 @@ class Request:
         return len(self.prompt)
 
 
+@dataclass
+class _PrefillJob:
+    """An admitted request mid chunked-prefill: pages are allocated,
+    ``next_page`` is the first prompt page the next chunk will write."""
+    req: Request
+    page_tokens: List[Tuple[int, ...]]
+    pp: int                           # total prompt pages
+    next_page: int
+
+
 @dataclass(frozen=True)
 class EngineConfig:
     """Engine shape/bucket/probe knobs (all trace-shape determining)."""
@@ -85,6 +118,9 @@ class EngineConfig:
     probe_max_probes: int = 16
     prefix_cache: bool = True
     interpret: Optional[bool] = None
+    prefill_chunk_pages: int = 0      # 0 = whole-prompt prefill (DSE axis)
+    evict_policy: str = "lru"         # "lru" | "clear" (legacy)
+    donate: Optional[bool] = None     # None = auto (off probe / off CPU)
 
 
 class InferenceEngine:
@@ -121,7 +157,28 @@ class InferenceEngine:
         if config.use_kernel and config.max_pages % config.pages_per_step:
             raise ValueError(f"max_pages {config.max_pages} not divisible "
                              f"by pages_per_step {config.pages_per_step}")
+        if config.prefill_chunk_pages < 0:
+            raise ValueError(f"prefill_chunk_pages must be >= 0, "
+                             f"got {config.prefill_chunk_pages}")
+        if config.prefill_chunk_pages and cfg.moe is not None \
+                and cfg.moe.impl != "ragged":
+            raise ValueError(
+                "chunked prefill requires dropless (ragged) MoE routing; "
+                f"impl={cfg.moe.impl!r} drops tokens by total count, which "
+                "breaks chunk/whole-prompt bit-identity")
+        if config.evict_policy not in ("lru", "clear"):
+            raise ValueError(f"evict_policy must be 'lru' or 'clear', "
+                             f"got {config.evict_policy!r}")
+        if config.donate and config.probe:
+            raise ValueError(
+                "donate=True is incompatible with probe=True: probed steps "
+                "run through ProbeSession's stateful wrapper, which shifts "
+                "positional args and would donate probe state instead of "
+                "the pool")
         self.model, self.params, self.config = model, params, config
+        self._donate = (config.donate if config.donate is not None
+                        else (not config.probe
+                              and jax.default_backend() != "cpu"))
         kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
         shape = (cfg.num_layers, config.pool_pages, config.page_size, kv, hd)
         kvd = jnp.dtype(cfg.kv_cache_dtype)
@@ -130,22 +187,30 @@ class InferenceEngine:
         self.table = PageTable(config.pool_pages, config.page_size)
         self.tree: Optional[PrefixTree] = \
             PrefixTree(self.table) if config.prefix_cache else None
-        self._steps: Dict[Tuple[str, int], Any] = {}
+        self._steps: Dict[Tuple[str, Any], Any] = {}
         self._waiting: deque = deque()
         self._active: List[Request] = []
+        self._prefilling: deque = deque()     # _PrefillJob, FCFS
         self._finished: List[Request] = []
         self._next_rid = 0
         self.phase_stats: Dict[str, Dict[str, int]] = {
             p: {"steps": 0, "cycles": 0} for p in PHASES}
         self.bucket_hist: Dict[int, int] = {}
+        self.chunk_stats: Dict[Tuple[int, int], Dict[str, int]] = {}
+        self.evictions = 0                    # pages reclaimed from tree
+        self.hol_blocked_steps = 0            # decode rounds displaced
+        self.tokens_out = 0
 
     # -- step registry ---------------------------------------------------
-    def _build(self, phase: str, size: int):
+    def _build(self, phase: str, size):
         c = self.config
         if phase == "prefill":
             fn = build_engine_prefill(self.model, size, c.page_size)
         elif phase == "cache":
             fn = build_page_scatter(size)
+        elif phase == "chunkpf":
+            fn = build_chunk_prefill(self.model, size[0], size[1],
+                                     c.page_size)
         else:
             fn = build_paged_decode(
                 self.model, size, c.max_pages, c.page_size,
@@ -153,13 +218,16 @@ class InferenceEngine:
                 interpret=c.interpret)
         if c.probe:
             from repro.core import ProbeConfig, ProbeSession
+            tag = size if isinstance(size, int) \
+                else "x".join(str(s) for s in size)
             return ProbeSession(fn, ProbeConfig(
                 targets=c.probe_targets, offload=1.0,
                 max_probes=c.probe_max_probes),
-                bus=self.bus, source=f"engine/{phase}x{size}")
-        return jax.jit(fn)
+                bus=self.bus, source=f"engine/{phase}x{tag}")
+        dn = donation_argnums(phase) if self._donate else ()
+        return jax.jit(fn, donate_argnums=dn)
 
-    def _entry(self, phase: str, size: int):
+    def _entry(self, phase: str, size):
         entry = self._steps.get((phase, size))
         if entry is None:
             entry = self._steps[(phase, size)] = self._build(phase, size)
@@ -168,29 +236,58 @@ class InferenceEngine:
     def _invoke(self, entry, *args):
         return entry.step(*args) if self.config.probe else entry(*args)
 
+    def _chunk_shapes(self) -> List[Tuple[int, int]]:
+        """Every (ctx_pages, chunk_pages) continuation shape the chunked
+        scheduler can reach: chunk starts are multiples of K, the final
+        chunk covers the remainder (never padded past the prompt's own
+        page-aligned length, so it replays the whole-prompt row plan)."""
+        K = self.config.prefill_chunk_pages
+        shapes = set()
+        if K:
+            for pp in range(K + 1, self.config.max_pages + 1):
+                for cs in range(K, pp, K):
+                    shapes.add((cs, min(K, pp - cs)))
+        return sorted(shapes)
+
     def warmup(self):
         """Trace + compile every (phase, shape) step ahead of serving.
 
-        Outputs are discarded (the pool is never assigned), so warmup
-        leaves serving state untouched — it only fills the compile
-        caches, making wave-over-wave host memory flat (soak test)."""
+        Without donation the outputs are discarded (the pool is never
+        assigned), so warmup leaves serving state untouched. With
+        donation the pool buffers passed in are consumed, so the pool is
+        rebound to each step's outputs; the null page picks up warmup
+        writes, which no real request ever reads unmasked. Either way
+        warmup only fills the compile caches, keeping wave-over-wave
+        host memory flat (soak test)."""
         c, ps = self.config, self.config.page_size
         for pp in range(1, c.max_pages + 1):
             _, k, v = self._invoke(
                 self._entry("prefill", pp), self.params,
                 {"tokens": jnp.zeros((1, pp * ps), jnp.int32),
                  "last_idx": jnp.zeros((1,), jnp.int32)})
-            self._invoke(self._entry("cache", pp), self.pool_k,
-                         self.pool_v, k, v, jnp.zeros((pp,), jnp.int32))
-        for b in c.buckets:
+            out = self._invoke(self._entry("cache", pp), self.pool_k,
+                               self.pool_v, k, v,
+                               jnp.zeros((pp,), jnp.int32))
+            if self._donate:
+                self.pool_k, self.pool_v = out
+        for (cs, n) in self._chunk_shapes():
             self._invoke(
+                self._entry("chunkpf", (cs, n)), self.params, self.pool_k,
+                self.pool_v,
+                {"tokens": jnp.zeros((1, n * ps), jnp.int32),
+                 "ctx_pages": jnp.zeros((cs,), jnp.int32),
+                 "last_idx": jnp.zeros((1,), jnp.int32)})
+        for b in c.buckets:
+            out = self._invoke(
                 self._entry("decode", b), self.params, self.pool_k,
                 self.pool_v,
                 {"tokens": jnp.zeros((b, 1), jnp.int32),
                  "pos": jnp.zeros((b,), jnp.int32),
                  "pages": jnp.zeros((b, c.max_pages), jnp.int32)})
+            if self._donate:
+                self.pool_k, self.pool_v = out[1], out[2]
 
-    def _step(self, phase: str, size: int, *args):
+    def _step(self, phase: str, size, *args):
         """Run one step, return (outputs, model-clock cycle delta)."""
         entry = self._entry(phase, size)
         if self.config.probe:
@@ -200,7 +297,7 @@ class InferenceEngine:
         else:
             out = entry(*args)
             delta = 0
-        st = self.phase_stats[phase]
+        st = self.phase_stats.setdefault(phase, {"steps": 0, "cycles": 0})
         st["steps"] += 1
         st["cycles"] += delta
         if self.bus is not None:
@@ -242,6 +339,28 @@ class InferenceEngine:
         return [tuple(r.prompt[i * ps:(i + 1) * ps])
                 for i in range(len(r.prompt) // ps)]
 
+    def _reclaim(self, n_pages: int, n_shared: int,
+                 page_tokens: List[Tuple[int, ...]]) -> int:
+        """Evict prefix-cache pages until the head request's fresh-page
+        need fits, per ``evict_policy``; returns the updated shared-page
+        count (a "clear" drops the head's own match too)."""
+        if self.tree is None or not self.tree.nodes:
+            return n_shared
+        if self.config.evict_policy == "clear":
+            # legacy all-or-nothing: only safe once serving is idle
+            if not self._active and not self._prefilling:
+                self.evictions += len(self.tree.clear())
+                n_shared = 0
+            return n_shared
+        while n_pages - n_shared > self.table.free_pages:
+            shortfall = (n_pages - n_shared) - self.table.free_pages
+            freed = self.tree.evict(shortfall, protect=page_tokens)
+            if not freed:
+                break                 # every remaining leaf is in use
+            self.evictions += len(freed)
+            n_shared = self.tree.lookup(page_tokens)
+        return n_shared
+
     def _try_admit(self, r: Request) -> bool:
         n_pages = self._pages_needed(len(r.prompt), r.max_new)
         page_tokens = self._page_tokens(r)
@@ -249,10 +368,7 @@ class InferenceEngine:
         if n_pages - n_shared > self.table.free_pages:
             # prefix-cache pages are the only reclaimable slack: evict
             # when the pool alone is the blocker, else wait for drains
-            if self.tree is not None and self.tree.nodes \
-                    and not self._active:
-                self.tree.clear()
-                n_shared = 0
+            n_shared = self._reclaim(n_pages, n_shared, page_tokens)
             if n_pages - n_shared > self.table.free_pages:
                 return False
         shared = self.tree.match(page_tokens) if self.tree else []
@@ -260,13 +376,31 @@ class InferenceEngine:
         fresh = self.table.alloc(n_pages - len(shared))
         r.pages = shared + fresh
         r.shared_pages = len(shared)
-        self._prefill(r, page_tokens)
+        self._start_prefill(r, page_tokens)
         return True
+
+    def _start_prefill(self, r: Request,
+                       page_tokens: List[Tuple[int, ...]]):
+        K = self.config.prefill_chunk_pages
+        pp = math.ceil(len(r.prompt) / self.config.page_size)
+        if not K or pp <= K:
+            self._prefill(r, page_tokens)
+            return
+        # chunks start at multiples of K; fully prefix-shared leading
+        # chunks are skipped (their pages already hold these exact KV
+        # rows), but the final chunk always runs for the first token
+        start = min((r.shared_pages // K) * K, ((pp - 1) // K) * K)
+        self._prefilling.append(_PrefillJob(r, page_tokens, pp, start))
 
     def _prefill(self, r: Request, page_tokens: List[Tuple[int, ...]]):
         c = self.config
         P = len(r.prompt)
         pp = math.ceil(P / c.page_size)
+        if self._active:
+            # decode rounds this whole-prompt prefill displaces beyond
+            # the one chunk quantum any prefill step costs
+            q = max(c.prefill_chunk_pages, 1)
+            self.hol_blocked_steps += max(0, math.ceil(pp / q) - 1)
         toks = np.zeros((1, pp * c.page_size), np.int32)
         toks[0, :P] = r.prompt
         (logits, k, v), d = self._step(
@@ -280,14 +414,60 @@ class InferenceEngine:
         r.phase_cycles["cache"] += d
         if self.tree is not None and page_tokens:
             self.tree.insert(page_tokens, r.pages[:len(page_tokens)])
+        self._emit_first_token(r, logits)
+
+    def _emit_first_token(self, r: Request, logits):
         tok = int(jnp.argmax(logits, axis=-1)[0])
         r.out_tokens.append(tok)
+        self.tokens_out += 1
         r.last_tok = tok
-        r.pos = P - 1
+        r.pos = len(r.prompt) - 1
         if len(r.out_tokens) >= r.max_new:
             self._complete(r)
         else:
             self._active.append(r)
+
+    def _chunk_step(self):
+        """Prefill the head job's next chunk (one scheduler quantum)."""
+        c = self.config
+        job = self._prefilling[0]
+        r, ps = job.req, c.page_size
+        P, pp, cs = len(r.prompt), job.pp, job.next_page
+        n = min(c.prefill_chunk_pages, pp - cs)
+        final = cs + n >= pp
+        toks = np.zeros((1, n * ps), np.int32)
+        seg = r.prompt[cs * ps:min(P, (cs + n) * ps)]
+        toks[0, :len(seg)] = seg
+        li = (P - 1 - cs * ps) if final else (n * ps - 1)
+        batch = {"tokens": jnp.asarray(toks),
+                 "last_idx": jnp.array([li], jnp.int32)}
+        if cs == 0:
+            (logits, k, v), d = self._step("prefill", n, self.params,
+                                           batch)
+        else:
+            batch["ctx_pages"] = jnp.array(r.pages[:cs], jnp.int32)
+            (logits, k, v), d = self._step(
+                "chunkpf", (cs, n), self.params, self.pool_k, self.pool_v,
+                batch)
+        r.phase_cycles["prefill"] += d
+        ids = jnp.array(r.pages[cs:cs + n], jnp.int32)
+        (self.pool_k, self.pool_v), dc = self._step(
+            "cache", n, self.pool_k, self.pool_v, k, v, ids)
+        r.phase_cycles["cache"] += dc
+        cst = self.chunk_stats.setdefault((cs, n),
+                                          {"steps": 0, "cycles": 0})
+        cst["steps"] += 1
+        cst["cycles"] += d + dc
+        job.next_page = cs + n
+        # publish fully-written prompt pages incrementally so requests
+        # arriving mid-prefill can already share the finished chunks
+        if self.tree is not None and job.page_tokens:
+            done_pages = min(cs + n, len(job.page_tokens))
+            self.tree.insert(job.page_tokens[:done_pages],
+                             r.pages[:done_pages])
+        if final:
+            self._prefilling.popleft()
+            self._emit_first_token(r, logits)
 
     def _complete(self, r: Request):
         for p in r.pages:
@@ -304,7 +484,8 @@ class InferenceEngine:
                 "phase_cycles": dict(r.phase_cycles)})
 
     def _admit(self):
-        while self._waiting and len(self._active) < self.config.buckets[-1]:
+        while self._waiting and (len(self._active) + len(self._prefilling)
+                                 < self.config.buckets[-1]):
             if not self._try_admit(self._waiting[0]):
                 break                   # FCFS: the head blocks the line
             self._waiting.popleft()
@@ -331,6 +512,7 @@ class InferenceEngine:
             r.pos += 1
             tok = int(next_tok[i])
             r.out_tokens.append(tok)
+            self.tokens_out += 1
             r.last_tok = tok
             r.decode_batches.append(bucket)
             r.phase_cycles["decode"] += d
@@ -344,11 +526,17 @@ class InferenceEngine:
         """Serve until every submitted request has finished; returns the
         requests completed by this call, in submission order."""
         start = len(self._finished)
-        while self._waiting or self._active:
+        while self._waiting or self._active or self._prefilling:
             self._admit()
+            progressed = False
+            if self._prefilling:         # one chunk quantum per round,
+                self._chunk_step()       # interleaved with decode below
+                progressed = True
             if self._active:
                 self._decode_round()
-            elif self._waiting:          # head unadmittable w/ idle pool
+                progressed = True
+            if not progressed and self._waiting:
+                # head unadmittable with an otherwise idle engine
                 r = self._waiting[0]
                 raise PagePoolExhausted(
                     f"request {r.rid} needs "
@@ -365,10 +553,15 @@ class InferenceEngine:
 
     # -- teardown / reporting -------------------------------------------
     def drain(self):
-        """Release prefix-cache page references; after a completed run
-        the page table then balances (``table.balanced()``)."""
+        """Release prefix-cache page references through the evictor;
+        with no requests in flight the page table must then balance —
+        asserted here so drain can't mask a refcount leak."""
         if self.tree is not None:
-            self.tree.clear()
+            self.tree.evict_all()
+        if not (self._waiting or self._active or self._prefilling):
+            assert self.table.balanced(), (
+                f"page table unbalanced after drain: "
+                f"{self.table.used_pages} pages still referenced")
 
     def close(self):
         """Close probe sessions (restores each step's original sink)."""
@@ -390,11 +583,18 @@ class InferenceEngine:
             else 0.0,
             "buckets": dict(self.bucket_hist),
             "steps_traced": len(self._steps),
+            "evictions": self.evictions,
+            "hol_blocked_steps": self.hol_blocked_steps,
+            "tokens_out": self.tokens_out,
         }
 
     def phase_table(self) -> str:
         from repro.core.report import engine_phase_table
         return engine_phase_table(self.phase_stats)
+
+    def chunk_table(self) -> str:
+        from repro.core.report import engine_chunk_table
+        return engine_chunk_table(self.chunk_stats)
 
     def request_table(self, requests: List[Request]) -> str:
         from repro.core.report import engine_request_table

@@ -21,6 +21,7 @@ outputs is preserved (asserted in tests/test_engine.py).
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -103,6 +104,9 @@ class PageTable:
 class _Node:
     page: int
     children: Dict[Tuple[int, ...], "_Node"] = field(default_factory=dict)
+    parent: Optional["_Node"] = None
+    key: Optional[Tuple[int, ...]] = None
+    stamp: int = 0                        # last-matched LRU clock value
 
 
 class PrefixTree:
@@ -113,8 +117,14 @@ class PrefixTree:
     edge's KV rows. ``match`` walks the longest shared prefix and takes
     a reference per matched page for the caller; ``insert`` registers a
     request's freshly-prefilled full pages for future requests.
-    ``clear`` drops every tree-held reference (used at engine drain, so
-    page refcounts balance to zero).
+
+    Under pool pressure the tree is an LRU victim set: every ``match``
+    / ``insert`` stamps the touched path with a monotonic clock, and
+    ``evict`` frees leaf pages held *only* by the tree (refcount 1) in
+    least-recently-matched order — hot shared prefixes survive, pages a
+    live request still reads are never victims. ``evict_all`` (engine
+    drain) drops every tree-held reference in the same deterministic
+    leaf-first LRU order.
     """
 
     def __init__(self, table: PageTable):
@@ -123,6 +133,12 @@ class PrefixTree:
         self.hits = 0
         self.misses = 0
         self.nodes = 0
+        self.evicted = 0                  # cumulative pages freed to pool
+        self._clock = 0
+
+    def _touch(self, node: _Node) -> None:
+        self._clock += 1
+        node.stamp = self._clock
 
     def lookup(self, page_tokens: List[Tuple[int, ...]]) -> int:
         """Length of the longest shared prefix, in pages — no references
@@ -148,6 +164,7 @@ class PrefixTree:
             if child is None:
                 break
             out.append(self.table.share(child.page))
+            self._touch(child)
             node = child
         self.hits += len(out)
         self.misses += len(page_tokens) - len(out)
@@ -164,19 +181,90 @@ class PrefixTree:
         for toks, page in zip(page_tokens, pages):
             child = node.children.get(toks)
             if child is None:
-                child = _Node(self.table.share(page))
+                child = _Node(self.table.share(page), parent=node, key=toks)
                 node.children[toks] = child
                 added += 1
+            self._touch(child)
             node = child
         self.nodes += added
         return added
 
-    def clear(self) -> None:
-        """Release every tree-held page reference."""
-        stack = list(self.root.children.values())
+    # -- eviction --------------------------------------------------------
+    def _leaf_heap(self) -> List[Tuple[int, int, _Node]]:
+        """Min-heap of current leaves keyed (LRU stamp, insertion id)."""
+        leaves = []
+        stack = [self.root]
         while stack:
-            n = stack.pop()
-            self.table.free(n.page)
-            stack.extend(n.children.values())
-        self.root = _Node(NULL_PAGE)
-        self.nodes = 0
+            nd = stack.pop()
+            for ch in nd.children.values():
+                if ch.children:
+                    stack.append(ch)
+                else:
+                    leaves.append((ch.stamp, id(ch), ch))
+        heapq.heapify(leaves)
+        return leaves
+
+    def _unlink(self, node: _Node) -> Optional[_Node]:
+        """Detach a leaf from its parent; returns the parent if it just
+        became an evictable (non-root) leaf itself."""
+        assert not node.children
+        parent = node.parent
+        del parent.children[node.key]
+        self.nodes -= 1
+        if parent is not self.root and not parent.children:
+            return parent
+        return None
+
+    def evict(self, n_pages: int,
+              protect: Optional[List[Tuple[int, ...]]] = None) -> List[int]:
+        """Free up to ``n_pages`` pool pages under pressure, in
+        least-recently-matched leaf-first order.
+
+        Only pages whose *sole* reference is the tree's (refcount 1) are
+        victims — a page a live request shares is never evicted. Nodes on
+        the ``protect`` path (the head request's own prefix) are spared
+        so admission never cannibalizes the prefix it is about to match.
+        Returns the freed page ids in eviction order."""
+        protected = set()
+        if protect:
+            node = self.root
+            for toks in protect:
+                node = node.children.get(toks)
+                if node is None:
+                    break
+                protected.add(id(node))
+        heap = self._leaf_heap()
+        freed: List[int] = []
+        while heap and len(freed) < n_pages:
+            _, _, node = heapq.heappop(heap)
+            if id(node) in protected or self.table.refcount[node.page] != 1:
+                continue                  # shared with a live request
+            parent = self._unlink(node)
+            self.table.free(node.page)
+            freed.append(node.page)
+            if parent is not None:
+                heapq.heappush(heap, (parent.stamp, id(parent), parent))
+        self.evicted += len(freed)
+        return freed
+
+    def evict_all(self) -> List[int]:
+        """Drop every tree-held reference (engine drain), leaf-first in
+        LRU order; returns the pages actually freed to the pool (pages a
+        live request still references merely lose the tree's ref)."""
+        heap = self._leaf_heap()
+        freed: List[int] = []
+        while heap:
+            _, _, node = heapq.heappop(heap)
+            parent = self._unlink(node)
+            last = self.table.refcount[node.page] == 1
+            self.table.free(node.page)
+            if last:
+                freed.append(node.page)
+            if parent is not None:
+                heapq.heappush(heap, (parent.stamp, id(parent), parent))
+        return freed
+
+    def clear(self) -> List[int]:
+        """Release every tree-held page reference (legacy all-or-nothing
+        eviction policy); returns the pages freed to the pool."""
+        return self.evict_all()

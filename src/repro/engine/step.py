@@ -18,6 +18,12 @@ retraces (asserted in tests/test_engine.py). Three step families:
   shapes, same global softmax, vector positions instead of a shared
   scalar), optionally routed through the ``paged_attention`` Pallas
   kernel — both paths bit-identical to the dense reference.
+- **chunkpf** (one per (ctx pages, chunk pages) pair): continuation
+  prefill of one page-aligned prompt chunk against KV context gathered
+  from the pool. The flash blocks replay the *whole-prompt* row plan
+  (``attention._row_plan`` over ctx+chunk) restricted to the chunk's
+  rows, and every _flash_row op is row-independent, so chunked prefill
+  is bit-identical to the equivalent whole-prompt prefill step.
 
 Padded lanes of a decode bucket run token 0 at position 0 against the
 null page; every dummy lane writes identical values to the same slot,
@@ -33,7 +39,8 @@ import jax.numpy as jnp
 
 from repro.models import moe as moe_mod
 from repro.models import transformer as tfm
-from repro.models.attention import _project_qkv
+from repro.models.attention import (_flash_row, _head_mask, _project_qkv,
+                                    _repeat_kv, _row_plan)
 from repro.models.layers import mlp_apply, rmsnorm
 
 
@@ -41,6 +48,22 @@ def engine_compatible(cfg) -> bool:
     """Token-in/token-out attention stacks only: the paged KV layout
     has no analogue for SSM/hybrid recurrent state or frontend embeds."""
     return cfg.family not in ("ssm", "hybrid") and cfg.frontend == "none"
+
+
+def donation_argnums(phase: str) -> Tuple[int, ...]:
+    """Positional args each step family may donate under
+    ``jax.jit(..., donate_argnums=...)``.
+
+    Only buffers the step returns an updated version of are donatable:
+    the scatter step consumes+returns (pool_k, pool_v) at args (0, 1),
+    decode at args (1, 2). Prefill returns no pool, and chunkpf *reads*
+    the pool without returning it — donating either would invalidate
+    live engine state."""
+    if phase == "cache":
+        return (0, 1)
+    if phase == "decode":
+        return (1, 2)
+    return ()
 
 
 def build_engine_prefill(model, n_pages: int, page_size: int) -> Callable:
@@ -94,6 +117,127 @@ def build_page_scatter(n_pages: int) -> Callable:
         return pool_k, pool_v
 
     return scatter
+
+
+def build_chunk_prefill(model, ctx_pages: int, chunk_pages: int,
+                        page_size: int) -> Callable:
+    """Continuation prefill: one page-aligned prompt chunk against the
+    request's already-written context pages in the pool.
+
+    fn(params, pool_k, pool_v, batch) with batch = {"tokens":
+    (1, chunk_pages*page_size), "ctx_pages": (ctx_pages,) int32,
+    "last_idx": (1,)} -> (logits (1, V) at last_idx *within the chunk*,
+    k, v) where k/v are (L, chunk_pages, page_size, kv, hd) page-major
+    cache blocks for the chunk's own rows.
+
+    Bit-identity with whole-prompt prefill is structural: the flash
+    blocks replay ``_row_plan(ctx+chunk, attn_chunk, attn_chunk)`` — the
+    exact plan the whole-prompt step uses at this padded length —
+    restricted to the chunk's q rows, and every ``_flash_row`` reduction
+    is row-independent, so each row's (m, l, acc) accumulation sequence
+    is identical. Context K/V gathered from the pool equals the freshly
+    computed K/V bit-for-bit because the flash einsums cast inputs to
+    bfloat16 and the pool's ``kv_cache_dtype`` round-trip commutes with
+    that cast (exact for the repo's bf16/f32 cache dtypes).
+    """
+    cfg = model.cfg
+    ctx_len = ctx_pages * page_size
+    Sq = chunk_pages * page_size
+    S = ctx_len + Sq                     # whole-prompt padded length
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    scale = 1.0 / math.sqrt(hd)
+    qb, rows = _row_plan(S, cfg.attn_chunk, cfg.attn_chunk)
+    # whole-prompt flash blocks clipped to the chunk's rows: _flash_row
+    # is row-independent, so computing the sub-range of a block with the
+    # block's own (ctx, kv_chunk) reproduces the whole-prompt bits.
+    subs = []
+    for (off, ctx, chunk) in rows:
+        i0, i1 = max(off, ctx_len), min(off + qb, S)
+        if i0 < i1:
+            subs.append((i0, i1, ctx, chunk))
+
+    def chunkpf(params, pool_k, pool_v, batch):
+        p = model._compute_cast(params)
+        x = model._embed_in(p, batch)
+        assert x.shape[1] == Sq, (x.shape, Sq)
+        cd = x.dtype
+        positions = jnp.broadcast_to(
+            jnp.arange(ctx_len, S, dtype=jnp.int32)[None], (1, Sq))
+        ctx_ids = batch["ctx_pages"]
+
+        def body(carry, inp):
+            h, = carry
+            lp, li = inp
+            with jax.named_scope("layer"):
+                kp = jax.lax.dynamic_index_in_dim(pool_k, li, 0,
+                                                  keepdims=False)
+                vp = jax.lax.dynamic_index_in_dim(pool_v, li, 0,
+                                                  keepdims=False)
+                with jax.named_scope("attn"):
+                    qn = rmsnorm(h, lp["ln1"], cfg.norm_eps)
+                    q, k_new, v_new = _project_qkv(lp["attn"], qn, cfg,
+                                                   positions)
+                    with jax.named_scope("ctx_gather"):
+                        kc = kp[ctx_ids].reshape(1, ctx_len, kv, hd)
+                        vc = vp[ctx_ids].reshape(1, ctx_len, kv, hd)
+                        k_full = jnp.concatenate(
+                            [kc.astype(cd), k_new], axis=1)
+                        v_full = jnp.concatenate(
+                            [vc.astype(cd), v_new], axis=1)
+                    kr, vr = _repeat_kv(k_full, v_full, cfg)
+                    with jax.named_scope("flash"):
+                        outs = []
+                        for (i0, i1, ctx, chunk) in subs:
+                            q_blk = jax.lax.slice_in_dim(
+                                q, i0 - ctx_len, i1 - ctx_len, axis=1)
+                            k_ctx = jax.lax.slice_in_dim(kr, 0, ctx, axis=1)
+                            v_ctx = jax.lax.slice_in_dim(vr, 0, ctx, axis=1)
+                            o, _, _ = _flash_row(q_blk, k_ctx, v_ctx, i0,
+                                                 chunk, scale)
+                            outs.append(o.astype(cd))
+                        o = (jnp.concatenate(outs, axis=1)
+                             if len(outs) > 1 else outs[0])
+                    with jax.named_scope("out_proj"):
+                        hm = _head_mask(cfg, o.dtype)
+                        if hm is not None:
+                            o = o * hm[None, None, :, None]
+                        a = jnp.einsum("bsnh,nhd->bsd", o, lp["attn"]["wo"])
+                h = h + a
+                if cfg.moe is not None:
+                    with jax.named_scope("moe"):
+                        m, _ = moe_mod.moe_apply(
+                            lp["moe"], rmsnorm(h, lp["ln2"], cfg.norm_eps),
+                            cfg)
+                else:
+                    with jax.named_scope("mlp"):
+                        m = mlp_apply(lp["mlp"],
+                                      rmsnorm(h, lp["ln2"], cfg.norm_eps))
+                h = h + m
+            return (h,), (k_new, v_new)
+
+        stack = p["stack"]
+        with jax.named_scope("layers"):
+            (x,), (ks, vs) = jax.lax.scan(
+                body, (x,),
+                (stack["layers"],
+                 jnp.arange(cfg.num_layers, dtype=jnp.int32)))
+        with jax.named_scope("final_norm"):
+            x = rmsnorm(x, stack["ln_f"], cfg.norm_eps)
+        with jax.named_scope("last_logits"):
+            idx = batch["last_idx"][:, None, None].astype(jnp.int32)
+            last = jnp.take_along_axis(
+                x, idx.repeat(x.shape[-1], -1), axis=1)[:, 0]
+            logits = jnp.einsum(
+                "bd,dv->bv", last,
+                model._unembed_weight(p).astype(last.dtype),
+                preferred_element_type=jnp.float32)
+            logits = model._mask_pad(logits)
+        L = cfg.num_layers
+        k = ks[:, 0].reshape(L, chunk_pages, page_size, kv, hd)
+        v = vs[:, 0].reshape(L, chunk_pages, page_size, kv, hd)
+        return logits, k, v
+
+    return chunkpf
 
 
 def _paged_attn_xla(lp, x, kp, vp, pages, pos, cfg, s_max: int,

@@ -6,6 +6,11 @@ concrete problem shape (tuning is shape-specific, like the paper's
 per-design DSE). The ``bind`` closures call the raw kernels (not the
 jitted ``ops`` wrappers) so the traced jaxpr exposes the ``pallas_call``
 directly to the cost model and the probe instrumenter.
+
+``chunked_prefill`` is the odd one out: it tunes a *schedule* (the
+serving engine's prefill chunk quantum) rather than kernel tiles, so
+its bind traces plain XLA steps — the cost model sees zero Pallas
+resources and never prunes, and all pricing comes from probed cycles.
 """
 from __future__ import annotations
 
@@ -145,10 +150,94 @@ def paged_attention_space(*, B: int = 4, KV: int = 4, G: int = 2,
         is_valid=is_valid)
 
 
+def chunked_prefill_space(*, arch: str = "tinyllama-1.1b",
+                          prompt_pages: int = 4, page_size: int = 16,
+                          chunks: Tuple[int, ...] | None = None,
+                          seed: int = 0):
+    """Chunk-size space for the engine's chunked-prefill schedule.
+
+    The tunable axis is ``chunk_pages`` — how many pages of prompt one
+    scheduler quantum prefills (the engine's
+    ``EngineConfig.prefill_chunk_pages``), sitting next to the decode
+    kernel's ``pages_per_step`` axis. Each candidate binds the full
+    static chain the engine would run for a ``prompt_pages`` prompt:
+    an opening prefill step, then continuation chunks against the pool
+    (``build_chunk_prefill``), each followed by its page scatter. Every
+    candidate computes bit-identical logits (chunking is a pure
+    schedule change), so the DSE engine is pricing pure overhead:
+    context re-gather and per-chunk dispatch vs head-of-line latency.
+    """
+    from repro.configs.registry import smoke_config
+    from repro.core.dse import SearchSpace
+    from repro.engine.step import (build_chunk_prefill,
+                                   build_engine_prefill,
+                                   build_page_scatter)
+    from repro.models import Model
+
+    cfg = smoke_config(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    pp, ps = prompt_pages, page_size
+    if chunks is None:   # pow2 quanta plus the whole-prompt baseline
+        chunks = tuple(sorted(set(_pow2_range(1, pp)) | {pp}))
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    kvd = jnp.dtype(cfg.kv_cache_dtype)
+    # identity page table: prompt page i lives at pool slot i+1 (slot 0
+    # is the engine's pinned null page)
+    pool_shape = (cfg.num_layers, pp + 2, ps, kv, hd)
+    tokens = jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                (1, pp * ps), 0, cfg.vocab_size, jnp.int32)
+
+    def is_valid(c):
+        return 1 <= c["chunk_pages"] <= pp
+
+    def bind(c):
+        K = c["chunk_pages"]
+        plan = []                        # (cs, n, step_fn, scatter_fn)
+        cs = 0
+        while cs < pp:
+            n = min(K, pp - cs)
+            step = (build_engine_prefill(model, n, ps) if cs == 0
+                    else build_chunk_prefill(model, cs, n, ps))
+            plan.append((cs, n, step, build_page_scatter(n)))
+            cs += n
+
+        def fn(params, pool_k, pool_v, tokens):
+            with jax.named_scope("chunked_prefill"):
+                logits = None
+                for cs, n, step, scatter in plan:
+                    batch = {
+                        "tokens": tokens[:, cs * ps:(cs + n) * ps],
+                        "last_idx": jnp.array([n * ps - 1], jnp.int32),
+                    }
+                    if cs == 0:
+                        logits, k, v = step(params, batch)
+                    else:
+                        batch["ctx_pages"] = jnp.arange(
+                            1, cs + 1, dtype=jnp.int32)
+                        logits, k, v = step(params, pool_k, pool_v,
+                                            batch)
+                    ids = jnp.arange(cs + 1, cs + n + 1,
+                                     dtype=jnp.int32)
+                    pool_k, pool_v = scatter(pool_k, pool_v, k, v, ids)
+                return logits, pool_k, pool_v
+        return fn
+
+    return SearchSpace(
+        kernel_id="chunked_prefill",
+        axes={"chunk_pages": chunks},
+        bind=bind,
+        args=(params, jnp.zeros(pool_shape, kvd),
+              jnp.zeros(pool_shape, kvd), tokens),
+        default={"chunk_pages": pp},
+        is_valid=is_valid)
+
+
 SPACES = {
     "flash_attention": flash_attention_space,
     "ssd_scan": ssd_scan_space,
     "paged_attention": paged_attention_space,
+    "chunked_prefill": chunked_prefill_space,
 }
 
 
@@ -185,6 +274,10 @@ def sweep_space(kernel_id: str, **shape):
         n_pages = int(shape.get("n_pages", 8))
         return paged_attention_space(
             pages_per_step=_pow2_range(1, n_pages), **shape)
+    if kernel_id == "chunked_prefill":
+        pp = int(shape.get("prompt_pages", 4))
+        chunks = tuple(sorted(set(_pow2_range(1, pp)) | {pp}))
+        return chunked_prefill_space(chunks=chunks, **shape)
     raise KeyError(f"no sweep space for kernel {kernel_id!r}; "
                    f"known: {tuple(SPACES)}")
 
@@ -204,5 +297,7 @@ def sweep_shapes(kernel_id: str, *, seqs: Tuple[int, ...] = (),
                 for h in (heads or (2,))]
     if kernel_id == "paged_attention":
         return [{"n_pages": n} for n in (seqs or (8, 16))]
+    if kernel_id == "chunked_prefill":
+        return [{"prompt_pages": n} for n in (seqs or (2, 4))]
     raise KeyError(f"no sweep shapes for kernel {kernel_id!r}; "
                    f"known: {tuple(SPACES)}")

@@ -56,7 +56,9 @@ def _mesh_decode_session(model, shape, mesh_shape, frontend: bool,
 def _engine_serve(model, params, key, *, batch: int, prompt_len: int,
                   max_new: int, profile: bool,
                   profile_targets: Tuple[str, ...],
-                  profile_max_probes: int, engine_kernel: bool, bus=None):
+                  profile_max_probes: int, engine_kernel: bool,
+                  prefill_chunk: int = 0, donate: Optional[bool] = None,
+                  bus=None):
     """Serve ``batch`` random prompts through the continuous-batching
     engine (one request per row, decode bucketed at the batch size)."""
     import math
@@ -71,7 +73,8 @@ def _engine_serve(model, params, key, *, batch: int, prompt_len: int,
         buckets=(1, batch) if batch > 1 else (1,),
         use_kernel=engine_kernel, probe=profile,
         probe_targets=profile_targets,
-        probe_max_probes=profile_max_probes), bus=bus)
+        probe_max_probes=profile_max_probes,
+        prefill_chunk_pages=prefill_chunk, donate=donate), bus=bus)
     tokens = jax.random.randint(key, (batch, prompt_len), 0,
                                 cfg.vocab_size)
     prompts = np.asarray(tokens)
@@ -88,6 +91,9 @@ def _engine_serve(model, params, key, *, batch: int, prompt_len: int,
     if profile:
         print("\n# per-phase cycle attribution")
         print(eng.phase_table())
+        if prefill_chunk:
+            print("\n# per-chunk-shape prefill bill")
+            print(eng.chunk_table())
         print("\n# per-request phase bill")
         print(eng.request_table(done))
     eng.drain()
@@ -103,6 +109,7 @@ def serve(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
           profile_mesh: Tuple[int, ...] = (),
           autotune: bool = False, tune_cache: Optional[str] = None,
           engine: Optional[bool] = None, engine_kernel: bool = False,
+          prefill_chunk: int = 0, donate: Optional[bool] = None,
           status_port: Optional[int] = None):
     if autotune:
         from repro.kernels import tuning
@@ -128,7 +135,8 @@ def serve(arch: str = "tinyllama-1.1b", *, smoke: bool = True,
                 max_new=max_new, profile=profile,
                 profile_targets=profile_targets,
                 profile_max_probes=profile_max_probes,
-                engine_kernel=engine_kernel, bus=bus)
+                engine_kernel=engine_kernel,
+                prefill_chunk=prefill_chunk, donate=donate, bus=bus)
         finally:
             if plane is not None:
                 plane.finish()
@@ -244,6 +252,14 @@ def main():
                          "continuous-batching engine")
     ap.add_argument("--engine-kernel", action="store_true",
                     help="decode through the paged_attention Pallas kernel")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="prefill chunk quantum in pages (0 = whole-prompt "
+                         "prefill; >0 interleaves prefill chunks with "
+                         "decode rounds, killing head-of-line blocking)")
+    ap.add_argument("--donate", action="store_true", default=None,
+                    help="donate the paged KV pool to the cache/decode "
+                         "steps (in-place pool updates; default: auto "
+                         "on accelerators, off under --profile)")
     ap.add_argument("--status-port", type=int, default=None,
                     help="expose live telemetry over HTTP on this port "
                          "(0 = OS-assigned; prints the bound URL)")
@@ -257,6 +273,7 @@ def main():
                  autotune=args.autotune, tune_cache=args.tune_cache,
                  engine=False if args.no_engine else None,
                  engine_kernel=args.engine_kernel,
+                 prefill_chunk=args.prefill_chunk, donate=args.donate,
                  status_port=args.status_port)
     print("sampled token ids (first sequence):", toks[0].tolist())
 

@@ -64,6 +64,12 @@ def build_space(kernel: str, args: argparse.Namespace):
     if kernel == "ssd_scan":
         return search_spaces.ssd_scan_space(
             B=args.batch, H=args.heads, L=args.seq, seed=args.seed)
+    if kernel == "paged_attention":
+        return search_spaces.paged_attention_space(
+            B=args.batch, n_pages=max(1, args.seq // 16), seed=args.seed)
+    if kernel == "chunked_prefill":
+        return search_spaces.chunked_prefill_space(
+            prompt_pages=max(1, args.seq // 64), seed=args.seed)
     raise SystemExit(f"unknown kernel {kernel!r}; choose from "
                      f"{KERNELS + ('all',)}")
 
